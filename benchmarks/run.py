@@ -1,0 +1,32 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV.  Tables map to the paper:
+  table1 — processing-time comparison (sequential vs Courier pipeline)
+  table2 — per-module evaluation (HLS report → TPU roofline estimate)
+  table3 — resource utilization (BRAM/DSP/LUT → VMEM/MXU budget)
+  fig4   — traced function call graph incl. I/O data
+  roofline — deliverable (g), from the dry-run artifacts when present
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig4_callgraph, roofline, table1_pipeline,
+                            table2_modules, table3_resources)
+    print("name,value,derived")
+    for mod in (table1_pipeline, table2_modules, table3_resources,
+                fig4_callgraph, roofline):
+        try:
+            for name, value, derived in mod.run():
+                print(f"{name},{value},{str(derived).replace(',', ';')}")
+        except Exception as e:
+            print(f"{mod.__name__}.ERROR,-1,{type(e).__name__}: "
+                  f"{str(e)[:120]}".replace(",", ";"))
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

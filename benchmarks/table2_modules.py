@@ -1,0 +1,48 @@
+"""Paper Table II — evaluation of individual generated modules.
+
+The paper reports per-HLS-module frequency/latency/processing time.  The
+TPU analog: per Pallas module, the analytic roofline time on one v5e chip
+(the synthesis-report stand-in the Pipeline Generator actually uses) next
+to the measured software (jnp/XLA-CPU) time on this host.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.harris import config as HARRIS
+from repro.core.costmodel import measure_ms
+from repro.models.harris import make_harris_db
+
+
+def run() -> list[tuple[str, float, str]]:
+    db = make_harris_db(with_hw=True)
+    H, W = HARRIS.height, HARRIS.width
+    img = jax.random.uniform(jax.random.PRNGKey(0), (H, W, 3)) * 255
+    gray = db.entries["cvtColor"].software(img)
+
+    args = {"cvtColor": (img,), "cornerHarris": (gray,),
+            "normalize": (gray,), "convertScaleAbs": (gray,)}
+    rows = []
+    for name, a in args.items():
+        e = db.entries[name]
+        shapes = [tuple(x.shape) for x in a]
+        dtypes = [str(x.dtype) for x in a]
+        sw_ms = measure_ms(jax.jit(e.software), *a)
+        rows.append((f"table2.{name}.sw_cpu_ms", round(sw_ms, 3),
+                     f"paper Zynq-SW {HARRIS.paper_times_orig[name]} ms"))
+        if e.cost_hw is not None and e.accelerated is not None:
+            c = e.cost_hw(shapes, dtypes, {})
+            rows.append((f"table2.{name}.hw_tpu_roofline_ms",
+                         round(c.time_ms(), 4),
+                         f"paper HLS {HARRIS.paper_times_offl[name]} ms; "
+                         f"AI={c.arithmetic_intensity:.2f} flop/B "
+                         f"({c.dominant()}-bound)"))
+        else:
+            rows.append((f"table2.{name}.hw_tpu_roofline_ms", -1,
+                         "no hw module in DB (paper: normalize stayed SW)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

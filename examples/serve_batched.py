@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + KV-cache decode on a reduced config.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma3-12b
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0]] + (sys.argv[1:] or
+                                ["--arch", "gemma3-12b", "--reduced"])
+    serve.main()

@@ -1,0 +1,144 @@
+"""Checkpointing — atomic, manifest-verified, async-capable, keep-last-k.
+
+Layout:  <root>/step_<n>/  arrays.npz + manifest.json  (+ .tmp staging dir,
+renamed atomically so a crash mid-save never corrupts the latest step).
+Restore validates every leaf's shape/dtype against the manifest before any
+device_put, and can re-shard onto a target mesh (restore-time resharding =
+elastic restart onto a different topology).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+class CheckpointStore:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self._async_thread: threading.Thread | None = None
+
+    # -- paths ----------------------------------------------------------------- #
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save -------------------------------------------------------------------- #
+    def save(self, step: int, tree: Params, extra: dict | None = None) -> str:
+        leaves, treedef = jax.tree.flatten(tree)
+        raw = [np.asarray(x) for x in leaves]
+        # npz can't store ml_dtypes (bfloat16, fp8); persist as byte views
+        arrays = {f"leaf_{i}": _to_native(a) for i, a in enumerate(raw)}
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "leaves": [{"shape": list(a.shape), "dtype": str(a.dtype),
+                        "sum": _digest(a)} for a in raw],
+            "extra": extra or {},
+        }
+        tmp = self._dir(step) + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = self._dir(step)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic publish
+        self._gc()
+        return final
+
+    def save_async(self, step: int, tree: Params,
+                   extra: dict | None = None) -> None:
+        """Stage host copies now, write in the background (training continues)."""
+        host_tree = jax.tree.map(np.asarray, tree)
+        self.wait()
+        self._async_thread = threading.Thread(
+            target=self.save, args=(step, host_tree, extra), daemon=True)
+        self._async_thread.start()
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    # -- restore ------------------------------------------------------------------ #
+    def restore(self, step: int | None, like: Params,
+                shardings: Params | None = None) -> tuple[Params, dict]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = self._dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        leaves_like, treedef = jax.tree.flatten(like)
+        if manifest["n_leaves"] != len(leaves_like):
+            raise ValueError(
+                f"checkpoint has {manifest['n_leaves']} leaves, expected "
+                f"{len(leaves_like)} — incompatible tree")
+        out = []
+        shard_leaves = (jax.tree.flatten(shardings)[0]
+                        if shardings is not None else [None] * len(leaves_like))
+        for i, (ref, meta) in enumerate(zip(leaves_like, manifest["leaves"])):
+            a = _from_native(data[f"leaf_{i}"], meta["dtype"], meta["shape"])
+            if list(a.shape) != list(meta["shape"]) or str(a.dtype) != meta["dtype"]:
+                raise ValueError(f"leaf {i}: manifest/array mismatch")
+            if _digest(a) != meta["sum"]:
+                raise ValueError(f"leaf {i}: checksum mismatch (corrupt file)")
+            if tuple(a.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"leaf {i}: shape {a.shape} != expected {ref.shape}")
+            a = a.astype(ref.dtype)
+            out.append(jax.device_put(a, shard_leaves[i])
+                       if shard_leaves[i] is not None else jax.device_put(a))
+        return jax.tree.unflatten(treedef, out), manifest["extra"]
+
+    # -- retention ------------------------------------------------------------------ #
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._dir(s), ignore_errors=True)
+
+
+def _digest(a: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(a).tobytes()).hexdigest()[:16]
+
+
+def _to_native(a: np.ndarray) -> np.ndarray:
+    """ml_dtypes (bf16/fp8) → byte view that npz can store."""
+    if a.dtype.kind == "V" or str(a.dtype) not in np.sctypeDict:
+        return np.ascontiguousarray(a).view(np.uint8)
+    return a
+
+
+def _from_native(a: np.ndarray, dtype: str, shape: list) -> np.ndarray:
+    if str(a.dtype) == dtype:
+        return a
+    import ml_dtypes  # ships with jax
+    dt = np.dtype(getattr(ml_dtypes, dtype, dtype))
+    return a.view(dt).reshape(shape)

@@ -1,0 +1,41 @@
+"""Courier-TPU core — the paper's contribution as a composable JAX library.
+
+Paper: "An Automatic Mixed Software Hardware Pipeline Builder for CPU-FPGA
+Platforms" (Miyajima, Thomas, Amano, 2014) — re-targeted to TPU pods.
+
+Flow (paper Fig. 1):
+  Frontend.trace        Steps 1-5  — runtime trace of an unmodified callable
+  (user edit_ir hook)   Steps 6-7  — inspect/modify the Courier IR
+  PipelineGenerator     Step 8     — DB lookup, fusion, balanced partition,
+                                     mixed sw/hw token pipeline
+  courier_offload       Step 9     — deployable wrapper w/ Off-load Switcher
+"""
+from .costmodel import (CostModel, NodeCost, PEAK_FLOPS_BF16, HBM_BW,
+                        ICI_BW_PER_LINK, HBM_BYTES, VMEM_BYTES,
+                        attention_cost, elementwise_cost, matmul_cost,
+                        measure_ms, stencil_cost)
+from .database import ModuleDatabase, ModuleEntry, default_db
+from .ir import CourierIR, Node, Value, linear_ir
+from .offloader import OffloadedFunction, OffloadPlan, courier_offload
+from .partition import (PipelinePlan, StagePlan, fuse_adjacent_hw,
+                        partition_optimal, partition_paper)
+from .pipeline import BuiltPipeline, PipelineGenerator, assign_placements
+from .spmd_pipeline import (pipeline_microbatches, spmd_pipeline_fn,
+                            stack_stage_params, stage_apply)
+from .tracer import Frontend, Library, deploy
+
+__all__ = [
+    "CostModel", "NodeCost", "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW_PER_LINK",
+    "HBM_BYTES", "VMEM_BYTES",
+    "attention_cost", "elementwise_cost", "matmul_cost", "measure_ms",
+    "stencil_cost",
+    "ModuleDatabase", "ModuleEntry", "default_db",
+    "CourierIR", "Node", "Value", "linear_ir",
+    "OffloadedFunction", "OffloadPlan", "courier_offload",
+    "PipelinePlan", "StagePlan", "fuse_adjacent_hw", "partition_optimal",
+    "partition_paper",
+    "BuiltPipeline", "PipelineGenerator", "assign_placements",
+    "pipeline_microbatches", "spmd_pipeline_fn", "stack_stage_params",
+    "stage_apply",
+    "Frontend", "Library", "deploy",
+]

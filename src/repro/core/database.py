@@ -1,0 +1,109 @@
+"""Module database — the paper's predefined hardware-module database.
+
+Courier-FPGA's Backend "searches corresponding predefined hardware modules
+from a database by functions name" (paper Sect. III).  A hit means the
+function is off-loaded to the FPGA module; a miss means the original
+software function keeps running on the CPU.
+
+TPU mapping: an *accelerated* implementation is a hand-tiled Pallas TPU
+kernel (the analog of a predefined HLS module); the *software* fallback is
+the pure-jnp implementation compiled by stock XLA.  Entries are keyed by
+function name, exactly like the paper (``hls::Sobel`` for ``cv::Sobel``),
+with an optional applicability predicate standing in for "the HLS library
+supports this data layout".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from .costmodel import NodeCost
+
+
+@dataclass
+class ModuleEntry:
+    """One database row: a library function and its implementations."""
+
+    name: str
+    software: Callable                       # pure-jnp fallback ("runs on CPU")
+    accelerated: Callable | None = None      # Pallas-backed ("runs on FPGA")
+    applicable: Callable[..., bool] | None = None   # shapes/dtypes predicate
+    cost_hw: Callable[..., NodeCost] | None = None  # synthesis-report analog
+    cost_sw: Callable[..., NodeCost] | None = None
+    tags: tuple[str, ...] = ()
+
+    def has_hw(self, *shape_args: Any) -> bool:
+        if self.accelerated is None:
+            return False
+        if self.applicable is not None and shape_args:
+            try:
+                return bool(self.applicable(*shape_args))
+            except TypeError:
+                return True
+        return True
+
+
+class ModuleDatabase:
+    """Name → ModuleEntry registry with decorator-based registration."""
+
+    def __init__(self, name: str = "default"):
+        self.name = name
+        self.entries: dict[str, ModuleEntry] = {}
+
+    # -- registration -------------------------------------------------------- #
+    def register(self, name: str, software: Callable,
+                 accelerated: Callable | None = None,
+                 applicable: Callable[..., bool] | None = None,
+                 cost_hw: Callable[..., NodeCost] | None = None,
+                 cost_sw: Callable[..., NodeCost] | None = None,
+                 tags: tuple[str, ...] = ()) -> ModuleEntry:
+        e = ModuleEntry(name=name, software=software, accelerated=accelerated,
+                        applicable=applicable, cost_hw=cost_hw, cost_sw=cost_sw,
+                        tags=tags)
+        self.entries[name] = e
+        return e
+
+    def library(self, name: str, **kwargs):
+        """Decorator: register the decorated fn as the *software* impl."""
+        def deco(fn: Callable) -> Callable:
+            self.register(name, software=fn, **kwargs)
+            return fn
+        return deco
+
+    def add_accelerated(self, name: str, fn: Callable,
+                        applicable: Callable[..., bool] | None = None) -> None:
+        if name not in self.entries:
+            raise KeyError(f"register software impl for {name!r} first")
+        self.entries[name].accelerated = fn
+        if applicable is not None:
+            self.entries[name].applicable = applicable
+
+    # -- lookup (paper: "searches ... by functions name") --------------------- #
+    def lookup(self, name: str) -> ModuleEntry | None:
+        return self.entries.get(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.entries
+
+    def resolve(self, name: str, *shape_args: Any,
+                prefer_hw: bool = True) -> tuple[Callable, str]:
+        """Return (callable, placement) for a function name.
+
+        Placement is "hw" when an applicable accelerated module exists and
+        ``prefer_hw`` (the default, as in the paper), else "sw".  Unknown
+        names raise — the tracer only records registered library functions,
+        mirroring the paper's library-interposition Frontend.
+        """
+        e = self.lookup(name)
+        if e is None:
+            raise KeyError(f"{name!r} not in module database {self.name!r}")
+        if prefer_hw and e.has_hw(*shape_args):
+            return e.accelerated, "hw"
+        return e.software, "sw"
+
+    def names(self) -> list[str]:
+        return sorted(self.entries)
+
+
+# A process-wide default database, like the toolchain's single module DB.
+default_db = ModuleDatabase("courier-default")

@@ -1,0 +1,222 @@
+"""Courier IR — the coarse-grained dataflow representation (paper Sect. II-B).
+
+The IR mirrors what Courier-FPGA's Frontend extracts from a running binary
+(paper Steps 1-5): an *ordered* function-call graph whose nodes are
+library-level functions ("not a single x86 assembly code ... but a process
+with a certain amount of computation") and whose edges carry the observed
+input/output data metadata (shape, dtype == the paper's "bit-depth", byte
+size) plus a profile log (processing time, absolute start/end times).
+
+Nodes are kept in chronological (traced) order, exactly like the paper's
+Fig. 4 graph; the Pipeline Generator partitions this order into contiguous
+stages.  Users may inspect and edit the IR (paper Steps 6-7) before the
+Backend builds the pipeline.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field, asdict
+from typing import Any, Callable, Iterable, Sequence
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------- #
+# Values (edges)
+# --------------------------------------------------------------------------- #
+@dataclass
+class Value:
+    """An edge in the call graph: one observed array in/out of a function.
+
+    ``shape``/``dtype`` correspond to the paper's ``height x width x
+    bit-depth x channels`` node annotation; ``nbytes`` is what the Pipeline
+    Generator uses for port sizing / communication-cost estimates.
+    """
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str
+    producer: str | None = None          # node name that wrote it (None = graph input)
+    consumers: list[str] = field(default_factory=list)
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) * np.dtype(self.dtype).itemsize if self.shape else np.dtype(self.dtype).itemsize
+
+    @property
+    def bit_depth(self) -> int:
+        """Paper's AXI port-width input: bits per element."""
+        return np.dtype(self.dtype).itemsize * 8
+
+
+# --------------------------------------------------------------------------- #
+# Nodes (function calls)
+# --------------------------------------------------------------------------- #
+@dataclass
+class Node:
+    """One traced library-function call.
+
+    ``fn_key`` is the database lookup key (paper: the function *name* used to
+    search the hardware-module database).  ``time_ms`` is the profiled
+    processing time from the Frontend; ``placement`` is filled by the Backend
+    after database lookup ("hw" = accelerated/Pallas module exists, "sw" =
+    software fallback on plain XLA).
+    """
+
+    name: str                              # unique instance name, e.g. "cvtColor_0"
+    fn_key: str                            # database key, e.g. "cvtColor"
+    inputs: list[str] = field(default_factory=list)    # Value names
+    outputs: list[str] = field(default_factory=list)   # Value names
+    params: dict[str, Any] = field(default_factory=dict)  # static call params
+    time_ms: float | None = None           # profiled processing time
+    t_start: float | None = None           # absolute start (profile log)
+    t_end: float | None = None             # absolute end   (profile log)
+    flops: float | None = None             # analytical cost-model annotations
+    bytes_rw: float | None = None
+    placement: str = "unassigned"          # "hw" | "sw" | "unassigned"
+    fused_from: list[str] = field(default_factory=list)  # names of fused originals
+
+
+# --------------------------------------------------------------------------- #
+# Graph
+# --------------------------------------------------------------------------- #
+class CourierIR:
+    """Ordered function-call graph with I/O data (paper Fig. 4)."""
+
+    def __init__(self, name: str = "trace"):
+        self.name = name
+        self.nodes: list[Node] = []                 # chronological order
+        self.values: dict[str, Value] = {}
+        self.graph_inputs: list[str] = []
+        self.graph_outputs: list[str] = []
+
+    # -- construction ------------------------------------------------------ #
+    def add_value(self, name: str, shape: Sequence[int], dtype: Any,
+                  producer: str | None = None) -> Value:
+        v = Value(name=name, shape=tuple(int(s) for s in shape),
+                  dtype=str(np.dtype(dtype)), producer=producer)
+        self.values[name] = v
+        return v
+
+    def add_node(self, node: Node) -> Node:
+        for i in node.inputs:
+            if i not in self.values:
+                raise KeyError(f"node {node.name}: unknown input value {i!r}")
+            self.values[i].consumers.append(node.name)
+        for o in node.outputs:
+            if o not in self.values:
+                raise KeyError(f"node {node.name}: unknown output value {o!r}")
+            self.values[o].producer = node.name
+        self.nodes.append(node)
+        return node
+
+    # -- queries ------------------------------------------------------------ #
+    def node(self, name: str) -> Node:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def total_time_ms(self) -> float:
+        return float(sum(n.time_ms or 0.0 for n in self.nodes))
+
+    def is_linear_chain(self) -> bool:
+        """True if every node's outputs feed only the next node / graph output.
+
+        The paper's fusion rule ("if the functions have no branch nor loop")
+        and the stage partitioner both operate on linear segments.
+        """
+        for i, n in enumerate(self.nodes):
+            for o in n.outputs:
+                cons = self.values[o].consumers
+                for c in cons:
+                    ci = next(j for j, m in enumerate(self.nodes) if m.name == c)
+                    if ci != i + 1:
+                        return False
+        return True
+
+    def consumers_of(self, node: Node) -> list[Node]:
+        out: list[Node] = []
+        for o in node.outputs:
+            for c in self.values[o].consumers:
+                out.append(self.node(c))
+        return out
+
+    def validate(self) -> None:
+        """Topological sanity: every input is produced before use."""
+        produced = set(self.graph_inputs)
+        for n in self.nodes:
+            for i in n.inputs:
+                if i not in produced:
+                    raise ValueError(
+                        f"IR not causally ordered: {n.name} reads {i!r} "
+                        f"before it is produced")
+            produced.update(n.outputs)
+        for o in self.graph_outputs:
+            if o not in produced:
+                raise ValueError(f"graph output {o!r} never produced")
+
+    # -- paper Fig.4-style rendering ---------------------------------------- #
+    def render(self) -> str:
+        """ASCII rendering of the chronological call graph incl. I/O data."""
+        lines = [f"CourierIR({self.name})  total={self.total_time_ms():.1f} ms"]
+        for vn in self.graph_inputs:
+            v = self.values[vn]
+            lines.append(f"  (in)  {vn}: {v.shape} {v.dtype}  [{v.nbytes} B]")
+        for n in self.nodes:
+            t = f"{n.time_ms:.1f} ms" if n.time_ms is not None else "?"
+            lines.append(f"  [{n.placement:^10s}] {n.name} <{n.fn_key}>  {t}")
+            for o in n.outputs:
+                v = self.values[o]
+                lines.append(f"      -> {o}: {v.shape} {v.dtype}  [{v.nbytes} B]")
+        for vn in self.graph_outputs:
+            lines.append(f"  (out) {vn}")
+        return "\n".join(lines)
+
+    # -- (de)serialization --------------------------------------------------- #
+    def to_json(self) -> str:
+        return json.dumps({
+            "name": self.name,
+            "nodes": [asdict(n) for n in self.nodes],
+            "values": {k: asdict(v) for k, v in self.values.items()},
+            "graph_inputs": self.graph_inputs,
+            "graph_outputs": self.graph_outputs,
+        }, indent=2)
+
+    @classmethod
+    def from_json(cls, s: str) -> "CourierIR":
+        d = json.loads(s)
+        ir = cls(d["name"])
+        for k, v in d["values"].items():
+            v = dict(v)
+            v["shape"] = tuple(v["shape"])
+            ir.values[k] = Value(**v)
+        for n in d["nodes"]:
+            ir.nodes.append(Node(**{**n, "inputs": list(n["inputs"]),
+                                    "outputs": list(n["outputs"])}))
+        ir.graph_inputs = list(d["graph_inputs"])
+        ir.graph_outputs = list(d["graph_outputs"])
+        return ir
+
+
+def linear_ir(name: str, fn_keys: Sequence[str], times_ms: Sequence[float],
+              io_shape: Sequence[int] = (1,), dtype: str = "float32") -> CourierIR:
+    """Convenience builder: a linear chain IR from (fn_key, time) pairs.
+
+    Used by tests/benchmarks to replay the *paper's own profile* (Table I)
+    through the Pipeline Generator.
+    """
+    assert len(fn_keys) == len(times_ms)
+    ir = CourierIR(name)
+    ir.add_value("d0", io_shape, dtype)
+    ir.graph_inputs = ["d0"]
+    prev = "d0"
+    for i, (k, t) in enumerate(zip(fn_keys, times_ms)):
+        out = f"d{i+1}"
+        ir.add_value(out, io_shape, dtype)
+        ir.add_node(Node(name=f"{k}_{i}", fn_key=k, inputs=[prev],
+                         outputs=[out], time_ms=float(t)))
+        prev = out
+    ir.graph_outputs = [prev]
+    ir.validate()
+    return ir

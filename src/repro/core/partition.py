@@ -1,0 +1,282 @@
+"""Stage partitioning — paper Sect. III-B.4, plus a beyond-paper optimum.
+
+The paper's policy, quoted: *"Pipeline Generator divides total processing
+time by the number of thread plus one and searches the closest sub-total of
+processing time of functions."*  Stages are contiguous runs of the traced
+chronological order; the first and last stage run ``serial_in_order`` and the
+middle stages ``parallel`` (TBB filter kinds).
+
+Two partitioners:
+
+* :func:`partition_paper` — the policy verbatim (paper-faithful baseline):
+  greedy cuts at the cumulative sum closest to ``total/(n_threads+1)``.
+* :func:`partition_optimal` — beyond-paper: the classic contiguous-partition
+  DP that *minimizes the bottleneck stage* (steady-state token period),
+  optionally charging each stage boundary its intermediate-data transfer
+  cost ("the communication frequency of intermediate data should be
+  reduced", paper Sect. III-B.4).  Recorded separately in EXPERIMENTS.md.
+
+Plus :func:`fuse_adjacent_hw` — the ``#pragma HLS dataflow`` analog: merge
+maximal runs of adjacent database-hit functions with no branch (single
+consumer = next node), keeping the paper's observed behavior that a fusion
+estimated slower than its pipelined parts is rejected (their fused
+cvtColor+cornerHarris "was too slow to use").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+from .database import ModuleDatabase
+from .ir import CourierIR, Node
+
+__all__ = [
+    "StagePlan", "PipelinePlan",
+    "partition_paper", "partition_optimal", "fuse_adjacent_hw",
+]
+
+
+@dataclass
+class StagePlan:
+    node_names: list[str]
+    est_time_ms: float
+    kind: str = "parallel"            # "serial_in_order" | "parallel" (TBB)
+    placements: list[str] = field(default_factory=list)   # "hw"/"sw" per node
+    comm_in_bytes: int = 0            # intermediate data entering this stage
+
+
+@dataclass
+class PipelinePlan:
+    stages: list[StagePlan]
+    policy: str = "paper"
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def bottleneck_ms(self) -> float:
+        return max(s.est_time_ms for s in self.stages)
+
+    def predicted_speedup(self, n_tokens: int = 1000) -> float:
+        """Sequential time vs pipelined time for a long token stream.
+
+        Pipeline time for T tokens = fill (sum of stages for token 0) +
+        (T-1) * bottleneck; sequential = T * sum.
+        """
+        total = sum(s.est_time_ms for s in self.stages)
+        pipe = total + (n_tokens - 1) * self.bottleneck_ms
+        return (n_tokens * total) / pipe
+
+    def describe(self) -> str:
+        rows = [f"PipelinePlan[{self.policy}] {self.n_stages} stages, "
+                f"bottleneck={self.bottleneck_ms:.2f} ms, "
+                f"steady-state speedup={self.predicted_speedup():.2f}x"]
+        for i, s in enumerate(self.stages):
+            rows.append(f"  Stage #{i} [{s.kind:>15s}] {s.est_time_ms:8.2f} ms  "
+                        f"{list(zip(s.node_names, s.placements))}")
+        return "\n".join(rows)
+
+
+# --------------------------------------------------------------------------- #
+# helpers
+# --------------------------------------------------------------------------- #
+def _times(ir: CourierIR) -> list[float]:
+    ts = []
+    for n in ir.nodes:
+        if n.time_ms is None:
+            raise ValueError(f"node {n.name} has no processing time; run the "
+                             "Frontend profile or CostModel.annotate first")
+        ts.append(float(n.time_ms))
+    return ts
+
+
+def _mk_plan(ir: CourierIR, cuts: Sequence[int], policy: str) -> PipelinePlan:
+    """``cuts`` are indices where a new stage begins (excluding 0)."""
+    bounds = [0, *cuts, len(ir.nodes)]
+    stages: list[StagePlan] = []
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        nodes = ir.nodes[a:b]
+        comm = 0
+        for inp in nodes[0].inputs:
+            v = ir.values[inp]
+            if v.producer is not None:      # intermediate data via ext. memory
+                comm += v.nbytes
+        stages.append(StagePlan(
+            node_names=[n.name for n in nodes],
+            est_time_ms=sum(n.time_ms for n in nodes),
+            placements=[n.placement for n in nodes],
+            comm_in_bytes=comm))
+    if stages:
+        stages[0].kind = "serial_in_order"       # paper: first ...
+        stages[-1].kind = "serial_in_order"      # ... and last are serial
+        for s in stages[1:-1]:
+            s.kind = "parallel"
+    return PipelinePlan(stages=stages, policy=policy)
+
+
+# --------------------------------------------------------------------------- #
+# Paper-faithful policy
+# --------------------------------------------------------------------------- #
+def partition_paper(ir: CourierIR, n_threads: int = 2) -> PipelinePlan:
+    """The paper's closest-subtotal policy, verbatim.
+
+    target = total / (n_threads + 1).  Walk the chronological function list
+    accumulating time; place a cut at the prefix whose subtotal is closest
+    to the target (choosing between stopping before/after the element that
+    crosses it), then restart the accumulation.
+    """
+    times = _times(ir)
+    n = len(times)
+    target = sum(times) / (n_threads + 1)
+    cuts: list[int] = []
+    acc = 0.0
+    for i, t in enumerate(times[:-1]):          # never cut after the last node
+        take = acc + t
+        # closest sub-total: cut *after* i if take is closer to target than
+        # continuing to take+next would be.
+        nxt = take + times[i + 1]
+        if abs(take - target) <= abs(nxt - target):
+            cuts.append(i + 1)
+            acc = 0.0
+        else:
+            acc = take
+    return _mk_plan(ir, cuts, policy="paper")
+
+
+# --------------------------------------------------------------------------- #
+# Beyond-paper: bottleneck-optimal contiguous partition (DP)
+# --------------------------------------------------------------------------- #
+def _boundary_cost(ir: CourierIR, i: int, comm_bw_bytes_per_ms: float | None) -> float:
+    """Transfer cost charged when a stage starts at node index i (>0)."""
+    if not comm_bw_bytes_per_ms or i == 0:
+        return 0.0
+    n = ir.nodes[i]
+    byts = 0
+    for inp in n.inputs:
+        v = ir.values[inp]
+        if v.producer is not None:
+            byts += v.nbytes
+    return byts / comm_bw_bytes_per_ms
+
+
+def partition_optimal(ir: CourierIR, max_stages: int | None = None,
+                      comm_bw_bytes_per_ms: float | None = None,
+                      stage_overhead_ms: float = 0.0) -> PipelinePlan:
+    """Minimize the bottleneck stage over all contiguous partitions.
+
+    DP over (prefix, #stages); objective for a stage [a, b) is
+    ``sum(times[a:b]) + boundary_cost(a) + stage_overhead_ms``.  Sweeps the
+    stage count 1..max_stages and keeps the best bottleneck (ties → fewer
+    stages, which also reduces "the communication frequency of intermediate
+    data").
+    """
+    times = _times(ir)
+    n = len(times)
+    max_stages = min(max_stages or n, n)
+    prefix = [0.0]
+    for t in times:
+        prefix.append(prefix[-1] + t)
+
+    def seg(a: int, b: int) -> float:           # cost of stage [a, b)
+        return (prefix[b] - prefix[a]
+                + _boundary_cost(ir, a, comm_bw_bytes_per_ms)
+                + stage_overhead_ms)
+
+    INF = float("inf")
+    best_plan: tuple[float, list[int]] | None = None
+    # dp[k][i] = min over partitions of first i nodes into k stages of the
+    # max stage cost; parent pointers reconstruct cuts.
+    dp_prev = [seg(0, i) for i in range(n + 1)]          # k = 1
+    parents: list[list[int]] = [[0] * (n + 1)]
+    if best_plan is None:
+        best_plan = (dp_prev[n] + 0.0, [])
+    for k in range(2, max_stages + 1):
+        dp_cur = [INF] * (n + 1)
+        par = [0] * (n + 1)
+        for i in range(k, n + 1):
+            for j in range(k - 1, i):
+                c = max(dp_prev[j], seg(j, i))
+                if c < dp_cur[i]:
+                    dp_cur[i], par[i] = c, j
+        parents.append(par)
+        if dp_cur[n] < best_plan[0] - 1e-12:
+            cuts: list[int] = []
+            i, kk = n, k
+            pars = parents
+            while kk > 1:
+                j = pars[kk - 1][i]
+                cuts.append(j)
+                i, kk = j, kk - 1
+            best_plan = (dp_cur[n], sorted(cuts))
+        dp_prev = dp_cur
+    return _mk_plan(ir, best_plan[1], policy="optimal-dp")
+
+
+# --------------------------------------------------------------------------- #
+# Fusion pass — #pragma HLS dataflow analog
+# --------------------------------------------------------------------------- #
+def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
+                     fused_cost_ms: Callable[[list[Node]], float] | None = None,
+                     accept_threshold: float = 1.0) -> CourierIR:
+    """Merge maximal runs of adjacent DB-hit nodes with no branch.
+
+    A run is fusable when every node has an accelerated module and each
+    node's outputs are consumed *only* by the next node in the run (paper:
+    "if the functions have no branch nor loop").  A fusion is accepted only
+    when ``fused_cost_ms(run) <= accept_threshold * max(individual times)``
+    — i.e. the fused module must not become the new bottleneck, encoding the
+    paper's rejection of their slow fused cvtColor+cornerHarris module.
+    Without an estimator the pass is conservative and fuses nothing.
+    """
+    if fused_cost_ms is None:
+        return ir
+    out = CourierIR(ir.name + "+fused")
+    out.values = {k: type(v)(**{**v.__dict__, "consumers": list(v.consumers)})
+                  for k, v in ir.values.items()}
+    out.graph_inputs = list(ir.graph_inputs)
+    out.graph_outputs = list(ir.graph_outputs)
+
+    def hw(n: Node) -> bool:
+        e = db.lookup(n.fn_key)
+        return e is not None and e.has_hw(*[ir.values[i].shape for i in n.inputs])
+
+    def chains_to_next(i: int) -> bool:
+        if i + 1 >= len(ir.nodes):
+            return False
+        nxt = ir.nodes[i + 1].name
+        return all(ir.values[o].consumers == [nxt] for o in ir.nodes[i].outputs)
+
+    i = 0
+    new_nodes: list[Node] = []
+    while i < len(ir.nodes):
+        j = i
+        while hw(ir.nodes[j]) and chains_to_next(j) and hw(ir.nodes[j + 1]):
+            j += 1
+        run = ir.nodes[i:j + 1]
+        if len(run) >= 2:
+            est = fused_cost_ms(run)
+            worst = max(n.time_ms or 0.0 for n in run)
+            if est <= accept_threshold * worst:
+                fused = Node(
+                    name="+".join(n.name for n in run),
+                    fn_key="+".join(n.fn_key for n in run),
+                    inputs=list(run[0].inputs),
+                    outputs=list(run[-1].outputs),
+                    params={}, time_ms=est, placement="hw",
+                    fused_from=[n.name for n in run])
+                new_nodes.append(fused)
+                i = j + 1
+                continue
+        new_nodes.append(run[0])
+        i += 1
+
+    # Rebuild value producer/consumer links against the new node list.
+    for v in out.values.values():
+        v.consumers = []
+        v.producer = None
+    out.nodes = []
+    for n in new_nodes:
+        out.add_node(n)
+    out.validate()
+    return out

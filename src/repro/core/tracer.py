@@ -1,0 +1,231 @@
+"""Frontend — runtime trace of an unmodified program (paper Sect. II-A).
+
+Courier-FPGA's Frontend needs no source access: it interposes on the shared
+library (dlsym/RTLD_NEXT) while the binary runs, gathers runtime information
+(Step 2) and recovers the *causal* function-call graph including input/output
+data (Step 3) by matching each call's inputs against earlier calls' outputs.
+
+JAX mapping: the "shared library" is the set of functions registered in the
+ModuleDatabase, exposed through a :class:`Library` namespace.  The call sites
+in user code never change; what a call *binds to* is decided by a dynamically
+scoped execution context — exactly the LD_PRELOAD/dlsym trick:
+
+* default        → software implementation (the original binary's behavior)
+* ``Frontend.trace`` → software implementation + recording (Steps 1-3)
+* ``deploy(plan)``   → the Off-loader's resolved implementation (Step 9)
+
+Causality is discovered with the paper's heuristic: an input array whose
+``id()`` matches a previously produced output is an edge; anything else is a
+graph input.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .database import ModuleDatabase, ModuleEntry, default_db
+from .ir import CourierIR, Node
+
+__all__ = ["Library", "Frontend", "deploy", "current_mode"]
+
+
+# --------------------------------------------------------------------------- #
+# Dynamically scoped dispatch (the dlsym/RTLD_NEXT analog)
+# --------------------------------------------------------------------------- #
+class _DispatchState(threading.local):
+    def __init__(self):
+        self.stack: list[Any] = []
+
+
+_state = _DispatchState()
+
+
+def _current() -> "Any | None":
+    return _state.stack[-1] if _state.stack else None
+
+
+def current_mode() -> str:
+    ctx = _current()
+    return getattr(ctx, "mode", "direct")
+
+
+class Library:
+    """Interposable namespace over a ModuleDatabase.
+
+    ``lib.cvtColor(x)`` behaves like the plain software function until a
+    trace/deploy context is active — user code is never edited (paper:
+    "without user intervention, source code tweaks or re-compilations").
+    """
+
+    def __init__(self, db: ModuleDatabase | None = None):
+        object.__setattr__(self, "_db", db or default_db)
+
+    @property
+    def db(self) -> ModuleDatabase:
+        return self._db
+
+    def __getattr__(self, name: str) -> Callable:
+        entry = self._db.lookup(name)
+        if entry is None:
+            raise AttributeError(f"{name!r} is not a registered library function")
+
+        def call(*args: Any, **kwargs: Any):
+            ctx = _current()
+            if ctx is None:
+                return entry.software(*args, **kwargs)
+            return ctx.call(entry, *args, **kwargs)
+
+        call.__name__ = name
+        return call
+
+
+def _is_array(x: Any) -> bool:
+    return isinstance(x, (jax.Array, np.ndarray))
+
+
+# --------------------------------------------------------------------------- #
+# Trace context (Frontend Steps 1-3)
+# --------------------------------------------------------------------------- #
+@dataclass
+class _TraceRecord:
+    fn_key: str
+    in_ids: list[int]
+    out_ids: list[int]
+    in_meta: list[tuple[tuple[int, ...], str]]
+    out_meta: list[tuple[tuple[int, ...], str]]
+    params: dict[str, Any]
+    time_ms: float
+    t_start: float
+    t_end: float
+
+
+class _TraceContext:
+    mode = "trace"
+
+    def __init__(self, profile: bool = True):
+        self.records: list[_TraceRecord] = []
+        self.keep_alive: list[Any] = []        # prevent id() reuse during trace
+        self.profile = profile
+        self.t0 = time.perf_counter()
+
+    def call(self, entry: ModuleEntry, *args: Any, **kwargs: Any):
+        arr_in = [a for a in args if _is_array(a)]
+        params = {k: v for k, v in kwargs.items() if not _is_array(v)}
+        arr_in += [v for v in kwargs.values() if _is_array(v)]
+        t_start = time.perf_counter() - self.t0
+        t = time.perf_counter()
+        out = entry.software(*args, **kwargs)
+        if self.profile:
+            out = jax.block_until_ready(out)
+        dt = (time.perf_counter() - t) * 1e3
+        t_end = time.perf_counter() - self.t0
+        outs = out if isinstance(out, (tuple, list)) else (out,)
+        arr_out = [o for o in outs if _is_array(o)]
+        self.keep_alive.extend(arr_in + arr_out)
+        self.records.append(_TraceRecord(
+            fn_key=entry.name,
+            in_ids=[id(a) for a in arr_in],
+            out_ids=[id(a) for a in arr_out],
+            in_meta=[(tuple(a.shape), str(a.dtype)) for a in arr_in],
+            out_meta=[(tuple(a.shape), str(a.dtype)) for a in arr_out],
+            params=params,
+            time_ms=dt, t_start=t_start, t_end=t_end))
+        return out
+
+
+class Frontend:
+    """Builds a CourierIR from one observed run of an unmodified callable."""
+
+    def __init__(self, db: ModuleDatabase | None = None):
+        self.db = db or default_db
+
+    def trace(self, fn: Callable, *args: Any, profile: bool = True,
+              name: str | None = None, **kwargs: Any) -> tuple[CourierIR, Any]:
+        ctx = _TraceContext(profile=profile)
+        _state.stack.append(ctx)
+        try:
+            out = fn(*args, **kwargs)
+        finally:
+            _state.stack.pop()
+        ir = self._build_ir(ctx, args, out, name or getattr(fn, "__name__", "trace"))
+        return ir, out
+
+    # -- Step 3: causal graph reconstruction --------------------------------- #
+    def _build_ir(self, ctx: _TraceContext, args: Any, out: Any,
+                  name: str) -> CourierIR:
+        ir = CourierIR(name)
+        id2val: dict[int, str] = {}
+        counter = [0]
+
+        def val_for(aid: int, meta: tuple, producer: str | None) -> str:
+            if aid in id2val:
+                return id2val[aid]
+            vname = f"d{counter[0]}"
+            counter[0] += 1
+            ir.add_value(vname, meta[0], meta[1], producer=producer)
+            id2val[aid] = vname
+            return vname
+
+        # graph inputs first (paper: data nodes of the running binary)
+        flat_args = [a for a in jax.tree.leaves(args) if _is_array(a)]
+        for a in flat_args:
+            vn = val_for(id(a), (tuple(a.shape), str(a.dtype)), None)
+            if vn not in ir.graph_inputs:
+                ir.graph_inputs.append(vn)
+
+        per_key: dict[str, int] = {}
+        for r in ctx.records:
+            idx = per_key.get(r.fn_key, 0)
+            per_key[r.fn_key] = idx + 1
+            nname = f"{r.fn_key}_{idx}"
+            ins = [val_for(i, m, None) for i, m in zip(r.in_ids, r.in_meta)]
+            outs = [val_for(o, m, nname) for o, m in zip(r.out_ids, r.out_meta)]
+            ir.add_node(Node(name=nname, fn_key=r.fn_key, inputs=ins,
+                             outputs=outs, params=r.params,
+                             time_ms=r.time_ms if ctx.profile else None,
+                             t_start=r.t_start, t_end=r.t_end))
+
+        flat_out = [a for a in jax.tree.leaves(out) if _is_array(a)]
+        for a in flat_out:
+            if id(a) in id2val:
+                ir.graph_outputs.append(id2val[id(a)])
+        ir.validate()
+        return ir
+
+
+# --------------------------------------------------------------------------- #
+# Deploy context (Off-loader Step 9) — see offloader.py for plan construction
+# --------------------------------------------------------------------------- #
+class _DeployContext:
+    mode = "deploy"
+
+    def __init__(self, resolve: Callable[[ModuleEntry], Callable]):
+        self._resolve = resolve
+
+    def call(self, entry: ModuleEntry, *args: Any, **kwargs: Any):
+        return self._resolve(entry)(*args, **kwargs)
+
+
+class deploy:
+    """``with deploy(plan):`` — run the same user code with calls rebound.
+
+    ``plan`` must provide ``resolve(entry) -> callable`` (see
+    :class:`repro.core.offloader.OffloadPlan`).
+    """
+
+    def __init__(self, plan: Any):
+        self.plan = plan
+
+    def __enter__(self):
+        _state.stack.append(_DeployContext(self.plan.resolve))
+        return self.plan
+
+    def __exit__(self, *exc: Any):
+        _state.stack.pop()
+        return False

@@ -1,0 +1,3 @@
+from .pipeline import Batch, PrefetchIterator, SyntheticLMData
+
+__all__ = ["Batch", "PrefetchIterator", "SyntheticLMData"]

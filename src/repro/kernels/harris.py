@@ -1,0 +1,128 @@
+"""Harris case-study kernels — the predefined "hardware modules" (paper §IV).
+
+Three Pallas TPU kernels mirror the three HLS modules the paper's database
+held (``hls::cvtColor``, ``hls::cornerHarris``, ``hls::convertScaleAbs``);
+``normalize`` deliberately has none, exactly like the paper's Table I.
+
+TPU adaptation of the paper's streaming AXI modules:
+  * the paper streams pixels over AXI with per-pixel pipelining; here each
+    grid program owns a row-block in VMEM and the 8×128 VPU vectorizes
+    across the row — block height plays the role of the AXI burst length.
+  * cornerHarris needs a 2-row halo (3×3 Sobel then box filter); the host
+    wrapper edge-pads the image and each program loads its rows + halo from
+    the padded HBM ref with ``pl.load`` (manual DMA), writing only its own
+    rows — the BlockSpec analog of the paper's line-buffer BRAMs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 8          # rows per program (8 sublanes × 128-lane rows)
+INTERPRET = True       # container is CPU; TPU target flips this off
+
+
+# --------------------------------------------------------------------------- #
+# cvtColor: RGB → gray (elementwise, tiled rows)
+# --------------------------------------------------------------------------- #
+def _cvt_kernel(img_ref, o_ref):
+    img = img_ref[...].astype(jnp.float32)
+    o_ref[...] = (0.299 * img[..., 0] + 0.587 * img[..., 1]
+                  + 0.114 * img[..., 2])
+
+
+def cvt_color(img: jax.Array, *, row_block: int = ROW_BLOCK,
+              interpret: bool | None = None) -> jax.Array:
+    H, W, C = img.shape
+    rb = row_block if H % row_block == 0 else H
+    return pl.pallas_call(
+        _cvt_kernel,
+        grid=(H // rb,),
+        in_specs=[pl.BlockSpec((rb, W, C), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((rb, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), jnp.float32),
+        interpret=INTERPRET if interpret is None else interpret,
+    )(img)
+
+
+# --------------------------------------------------------------------------- #
+# cornerHarris: Sobel + box-filtered second moments + response
+# --------------------------------------------------------------------------- #
+def _harris_kernel(g_ref, o_ref, *, rb: int, W: int, block_size: int,
+                   k: float, halo: int):
+    i = pl.program_id(0)
+    rows = pl.load(g_ref, (pl.ds(i * rb, rb + 2 * halo), slice(None))
+                   ).astype(jnp.float32)            # [rb+2h, W+2h]
+
+    def sh(a, dy, dx, h, w):                        # shifted window helper
+        return jax.lax.dynamic_slice(a, (dy, dx), (h, w))
+
+    h1, w1 = rb + 2 * halo - 2, W + 2 * halo - 2    # after 3x3 sobel
+    dx = (sh(rows, 0, 2, h1, w1) + 2 * sh(rows, 1, 2, h1, w1)
+          + sh(rows, 2, 2, h1, w1)
+          - sh(rows, 0, 0, h1, w1) - 2 * sh(rows, 1, 0, h1, w1)
+          - sh(rows, 2, 0, h1, w1))
+    dy = (sh(rows, 2, 0, h1, w1) + 2 * sh(rows, 2, 1, h1, w1)
+          + sh(rows, 2, 2, h1, w1)
+          - sh(rows, 0, 0, h1, w1) - 2 * sh(rows, 0, 1, h1, w1)
+          - sh(rows, 0, 2, h1, w1))
+    ixx, iyy, ixy = dx * dx, dy * dy, dx * dy
+
+    def box(a):
+        out = jnp.zeros((rb, W), jnp.float32)
+        for by in range(block_size):
+            for bx in range(block_size):
+                out = out + sh(a, by, bx, rb, W)
+        return out
+
+    sxx, syy, sxy = box(ixx), box(iyy), box(ixy)
+    det = sxx * syy - sxy * sxy
+    tr = sxx + syy
+    o_ref[...] = det - k * tr * tr
+
+
+def corner_harris(gray: jax.Array, block_size: int = 2, k: float = 0.04, *,
+                  row_block: int = ROW_BLOCK,
+                  interpret: bool | None = None) -> jax.Array:
+    H, W = gray.shape
+    rb = row_block if H % row_block == 0 else H
+    halo = 1 + block_size // 2          # sobel (1) + box reach
+    # edge-pad on the host (the paper's modules see replicated borders too)
+    pad = jnp.pad(gray, ((halo, halo + block_size - 1),
+                         (halo, halo + block_size - 1)), mode="edge")
+    kernel = functools.partial(_harris_kernel, rb=rb, W=W,
+                               block_size=block_size, k=k, halo=halo)
+    return pl.pallas_call(
+        kernel,
+        grid=(H // rb,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((rb, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), jnp.float32),
+        interpret=INTERPRET if interpret is None else interpret,
+    )(pad)
+
+
+# --------------------------------------------------------------------------- #
+# convertScaleAbs: |αx + β| saturated (elementwise, tiled rows)
+# --------------------------------------------------------------------------- #
+def _csa_kernel(x_ref, o_ref, *, alpha: float, beta: float):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.clip(jnp.abs(x * alpha + beta), 0.0, 255.0)
+
+
+def convert_scale_abs(x: jax.Array, alpha: float = 1.0, beta: float = 0.0, *,
+                      row_block: int = ROW_BLOCK,
+                      interpret: bool | None = None) -> jax.Array:
+    H, W = x.shape
+    rb = row_block if H % row_block == 0 else H
+    return pl.pallas_call(
+        functools.partial(_csa_kernel, alpha=alpha, beta=beta),
+        grid=(H // rb,),
+        in_specs=[pl.BlockSpec((rb, W), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), jnp.float32),
+        interpret=INTERPRET if interpret is None else interpret,
+    )(x)

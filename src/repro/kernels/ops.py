@@ -1,0 +1,69 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+The dispatch switch (`use_kernels`) is the kernels' Off-load Switcher: on
+TPU the Pallas modules run natively; on CPU they run in interpret mode for
+validation, and the default execution path falls back to the jnp
+references — mirroring the paper's hw-if-available / sw-fallback rule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .harris import convert_scale_abs as _csa_kernel
+from .harris import corner_harris as _harris_kernel
+from .harris import cvt_color as _cvt_kernel
+from .rmsnorm import rmsnorm as _rmsnorm_kernel
+
+_USE_KERNELS = False      # CPU container default: jnp refs; TPU: flip on
+
+
+def use_kernels(on: bool = True) -> None:
+    global _USE_KERNELS
+    _USE_KERNELS = on
+
+
+def kernels_enabled() -> bool:
+    return _USE_KERNELS
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def attention(q, k, v, causal: bool = True, window: int = 0):
+    """[B, T, H, hd] × [B, M, H, hd] (kv pre-expanded) → [B, T, H, hd]."""
+    if _USE_KERNELS:
+        return flash_attention(q, k, v, causal, window)
+    return ref.reference_attention(q, k, v, causal, window)
+
+
+@jax.jit
+def rmsnorm(x, scale):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if _USE_KERNELS:
+        return _rmsnorm_kernel(x2, scale).reshape(shape)
+    return ref.reference_rmsnorm(x2, scale).reshape(shape)
+
+
+@jax.jit
+def cvt_color(img):
+    if _USE_KERNELS:
+        return _cvt_kernel(img)
+    return ref.reference_cvt_color(img)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "k"))
+def corner_harris(gray, block_size: int = 2, k: float = 0.04):
+    if _USE_KERNELS:
+        return _harris_kernel(gray, block_size, k)
+    return ref.reference_corner_harris(gray, block_size, k)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta"))
+def convert_scale_abs(x, alpha: float = 1.0, beta: float = 0.0):
+    if _USE_KERNELS:
+        return _csa_kernel(x, alpha, beta)
+    return ref.reference_convert_scale_abs(x, alpha, beta)

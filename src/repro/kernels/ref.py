@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the "software functions")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: [B, T, H, hd]; k/v: [B, M, H, hd] → [B, T, H, hd], exact softmax."""
+    B, T, H, hd = q.shape
+    M = k.shape[1]
+    s = jnp.einsum("bthd,bmhd->bhtm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    d = jnp.arange(T)[:, None] - jnp.arange(M)[None, :]
+    mask = jnp.ones((T, M), bool)
+    if causal:
+        mask &= d >= 0
+    if window > 0:
+        mask &= d < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhtm,bmhd->bthd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def reference_rmsnorm(x: jax.Array, scale: jax.Array,
+                      eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# Harris oracles live with the model (repro.models.harris) — re-exported here
+# so every kernel has its ref in one namespace.
+from repro.models.harris import (convert_scale_abs as reference_convert_scale_abs,
+                                 corner_harris as reference_corner_harris,
+                                 cvt_color as reference_cvt_color)
+
+__all__ = ["reference_attention", "reference_rmsnorm",
+           "reference_convert_scale_abs", "reference_corner_harris",
+           "reference_cvt_color"]

@@ -1,0 +1,36 @@
+"""Fused RMSNorm — Pallas kernel (row-tiled, f32 accumulation in VMEM)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 256
+INTERPRET = True
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                 # [rb, d]
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + s_ref[...].astype(jnp.float32))
+                  ).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6, *,
+            row_block: int = ROW_BLOCK,
+            interpret: bool | None = None) -> jax.Array:
+    """x: [N, d] (flatten leading dims first), scale: [d]."""
+    N, d = x.shape
+    rb = row_block if N % row_block == 0 else N
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(N // rb,),
+        in_specs=[pl.BlockSpec((rb, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, d), x.dtype),
+        interpret=INTERPRET if interpret is None else interpret,
+    )(x, scale)

@@ -1,0 +1,216 @@
+"""Sharding rules — parameter/optimizer/cache layouts for the production mesh.
+
+Scheme (baseline cells):
+  * tensor-parallel dim → "model"  (attention heads / FFN hidden / experts)
+  * a second, storage-only dim → "data" (FSDP-style; GSPMD all-gathers
+    per layer inside the scan, so peak live weights stay ~one layer)
+  * optimizer moments follow their param (ZeRO-1 falls out of FSDP here)
+  * KV caches: batch → ("pod","data"); kv-heads → "model" when divisible,
+    else head_dim → "model" (mistral-style kv=8 < 16)
+  * activations (train): sequence-parallel constraint P(batch, "model", —)
+
+Every rule is divisibility-guarded: a dim that doesn't divide its mesh axis
+is left unsharded rather than failing (hymba's 25 heads, 32001 vocab...).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .mesh import batch_axes
+
+
+def _div(n: int, mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+def guard_spec(mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop spec axes whose mesh size doesn't divide the dim (public guard)."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    return _nd(mesh, dims, shape)
+
+
+def _nd(mesh, spec_dims: list, shape: tuple[int, ...]) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide."""
+    out = []
+    for dim, want in zip(shape, spec_dims):
+        if want is None:
+            out.append(None)
+            continue
+        axes = want if isinstance(want, tuple) else (want,)
+        good: list[str] = []
+        rem = dim
+        for a in axes:
+            if a in mesh.axis_names and rem % mesh.shape[a] == 0:
+                good.append(a)
+                rem //= mesh.shape[a]
+        out.append(tuple(good) if len(good) > 1 else (good[0] if good else None))
+    return P(*out)
+
+
+# --------------------------------------------------------------------------- #
+# parameter rules (path-pattern → dim spec)
+# --------------------------------------------------------------------------- #
+_PARAM_RULES: list[tuple[str, list]] = [
+    # embedding: vocab → model (TP) + d → data (FSDP)
+    (r"embed/table$",        ["model", "data"]),
+    # attention
+    (r"attn/wq$",            ["data", "model", None]),
+    (r"attn/wk$",            ["data", "model", None]),
+    (r"attn/wv$",            ["data", "model", None]),
+    (r"attn/wo$",            ["model", "data"]),
+    # dense mlp
+    (r"mlp/wi$",             ["data", None, "model"]),
+    (r"mlp/wo$",             ["model", "data"]),
+    # moe (experts → model = EP; within-expert ff → data for storage)
+    (r"moe/router$",         [None, None]),
+    (r"moe/wi$",             ["model", "data", None, None]),
+    (r"moe/wo$",             ["model", "data", None]),
+    # ssm (hymba)
+    (r"ssm/in_proj$",        ["data", None, "model"]),
+    (r"ssm/out_proj$",       ["model", "data"]),
+    (r"ssm/(conv|w_dt|w_bc|A_log|dt_bias|D)$", None),   # small → replicate
+    # rwkv
+    (r"rwkv/(wr|wk|wv|wg|cr)$", ["data", "model"]),
+    (r"rwkv/wo$",            ["model", "data"]),
+    (r"rwkv/ck$",            ["data", "model"]),
+    (r"rwkv/cv$",            ["model", "data"]),
+    (r"rwkv/.*",             None),
+    # norms & everything small
+    (r".*",                  None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(mesh, path, leaf) -> P:
+    """PartitionSpec for one parameter leaf (skips stacked layer dims)."""
+    s = _path_str(path)
+    shape = leaf.shape
+    # leading stacked-layer dims (scan stacks / vlm groups) stay unsharded
+    n_stack = 0
+    for pat, dims in _PARAM_RULES:
+        if re.search(pat, s):
+            if dims is None:
+                return P()
+            n_stack = len(shape) - len(dims)
+            if n_stack < 0:
+                return P()
+            return _nd(mesh, [None] * n_stack + dims, shape)
+    return P()
+
+
+def param_shardings(mesh, params: Any) -> Any:
+    return jax.tree.map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(mesh, path, leaf)),
+        params)
+
+
+def drop_data(spec: P) -> P:
+    """Remove the FSDP ("data") axis from a spec (serving layout)."""
+    out = []
+    for s in spec:
+        if s is None:
+            out.append(None)
+        elif isinstance(s, tuple):
+            kept = tuple(a for a in s if a != "data")
+            out.append(kept if kept else None)
+        else:
+            out.append(None if s == "data" else s)
+    return P(*out)
+
+
+def param_shardings_serving(mesh, params: Any) -> Any:
+    """TP-only weights (no FSDP): serving re-gathers nothing per step.
+
+    Correct when params/model-shards fit HBM next to the KV cache —
+    inference has no optimizer state, so the FSDP storage trick that
+    training needs just adds an all-gather to every decode step.
+    """
+    return jax.tree.map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, drop_data(param_spec(mesh, path, leaf))),
+        params)
+
+
+def opt_shardings(mesh, opt_state: Any, params: Any) -> Any:
+    """Moments mirror their parameter's sharding; step is replicated."""
+    pshard = param_shardings(mesh, params)
+    return type(opt_state)(
+        step=NamedSharding(mesh, P()),
+        m=pshard, v=pshard)
+
+
+# --------------------------------------------------------------------------- #
+# batch / cache / activation specs
+# --------------------------------------------------------------------------- #
+def batch_spec(mesh) -> P:
+    ba = batch_axes(mesh)
+    return P(ba if len(ba) > 1 else (ba[0] if ba else None), None)
+
+
+def act_spec(mesh) -> P:
+    """Sequence-parallel activation constraint [B, S, d]."""
+    ba = batch_axes(mesh)
+    b = ba if len(ba) > 1 else (ba[0] if ba else None)
+    return P(b, "model", None)
+
+
+def cache_spec(mesh, cfg, path, leaf) -> P:
+    """KV cache / recurrent state sharding (leaf has leading layer dim)."""
+    s = _path_str(path)
+    shape = leaf.shape
+    ba = batch_axes(mesh)
+    b = ba if len(ba) > 1 else (ba[0] if ba else None)
+    bdim = shape[1] if len(shape) > 1 else 1
+
+    def bspec():
+        # batch must divide; else replicate (long_500k batch=1)
+        if b is None:
+            return None
+        n = int(np.prod([mesh.shape[a] for a in (b if isinstance(b, tuple) else (b,))]))
+        return b if bdim % n == 0 else None
+
+    if re.search(r"(^|/)(k|v)$", s) and len(shape) == 5:
+        # [L, B, M, KV, hd]
+        L, B, M, KV, hd = shape
+        kv_ax = "model" if _div(KV, mesh, "model") else None
+        hd_ax = "model" if kv_ax is None and _div(hd, mesh, "model") else None
+        return P(None, bspec(), None, kv_ax, hd_ax)
+    if re.search(r"ssm/h$", s) or re.search(r"/S$", s):
+        dims = [None, bspec()] + [None] * (len(shape) - 2)
+        # shard the largest trailing dim over model if divisible
+        for i in range(2, len(shape)):
+            if _div(shape[i], mesh, "model"):
+                dims[i] = "model"
+                break
+        return P(*dims)
+    if len(shape) >= 2:
+        dims = [None, bspec()] + [None] * (len(shape) - 2)
+        for i in range(len(shape) - 1, 1, -1):
+            if _div(shape[i], mesh, "model"):
+                dims[i] = "model"
+                break
+        return P(*dims)
+    return P()
+
+
+def cache_shardings(mesh, cfg, cache: Any) -> Any:
+    return jax.tree.map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_spec(mesh, cfg, path, leaf)),
+        cache)

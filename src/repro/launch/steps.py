@@ -1,0 +1,236 @@
+"""Step builders + abstract input specs for every (arch × shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for every model input, per task spec:
+train lowers ``train_step``; prefill lowers the full forward;
+decode_* / long_* lower ``serve_step`` (one token against a seq_len cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import LM
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+from .sharding import (act_spec, batch_spec, cache_shardings, guard_spec,
+                       opt_shardings, param_shardings, param_spec)
+
+Params = Any
+
+
+def _layer_param_constraint(mesh):
+    """Constraint for a *sliced* layer's weights inside the scan body.
+
+    Same rules as storage sharding but with the "data" (FSDP) axis dropped —
+    i.e. "this layer is gathered on data, still TP-sharded on model".
+    Anchoring the slice keeps GSPMD's FSDP all-gather per-iteration instead
+    of hoisting a whole-stack gather out of the loop.
+    """
+    from .sharding import drop_data
+
+    def con(lp):
+        return jax.tree.map_with_path(
+            lambda path, a: jax.lax.with_sharding_constraint(
+                a, NamedSharding(mesh, drop_data(param_spec(mesh, path, a)))),
+            lp)
+
+    return con
+
+
+# --------------------------------------------------------------------------- #
+# batch specs
+# --------------------------------------------------------------------------- #
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_structs(cfg: ArchConfig, shape: ShapeConfig, mesh=None) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    bs = (NamedSharding(mesh, guard_spec(mesh, batch_spec(mesh), (B, S)))
+          if mesh is not None else None)
+    dt = jnp.dtype(cfg.dtype)
+
+    def tok3(s):  # [B, s, d] embeds sharding
+        if mesh is None:
+            return None
+        b = batch_spec(mesh)[0]
+        return NamedSharding(
+            mesh, guard_spec(mesh, P(b, None, None), (B, s, cfg.d_model)))
+
+    if shape.kind == "train":
+        out = {
+            "labels": _sds((B, S), jnp.int32, bs),
+            "mask": _sds((B, S), jnp.float32, bs),
+        }
+        if cfg.embeds_in:
+            out["embeds"] = _sds((B, S, cfg.d_model), dt, tok3(S))
+        else:
+            out["ids"] = _sds((B, S), jnp.int32, bs)
+        if cfg.cross_attn_every:
+            out["img_embeds"] = _sds((B, cfg.n_img_tokens, cfg.d_model), dt,
+                                     tok3(cfg.n_img_tokens))
+        return out
+    if shape.kind == "prefill":
+        out = {}
+        if cfg.embeds_in:
+            out["embeds"] = _sds((B, S, cfg.d_model), dt, tok3(S))
+        else:
+            out["ids"] = _sds((B, S), jnp.int32, bs)
+        if cfg.cross_attn_every:
+            out["img_embeds"] = _sds((B, cfg.n_img_tokens, cfg.d_model), dt,
+                                     tok3(cfg.n_img_tokens))
+        return out
+    # decode: one new token against a seq_len cache
+    out = {"pos": _sds((), jnp.int32,
+                       NamedSharding(mesh, P()) if mesh is not None else None)}
+    if cfg.embeds_in:
+        out["embeds"] = _sds((B, 1, cfg.d_model), dt, tok3(1))
+    else:
+        out["ids"] = _sds((B, 1), jnp.int32, bs)
+    return out
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    model = LM(cfg)
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(model.init, key)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, cache_len: int) -> Params:
+    model = LM(cfg)
+    return jax.eval_shape(lambda: model.init_cache(batch, cache_len))
+
+
+def with_shardings(mesh, tree: Params, shardings: Params) -> Params:
+    """Attach shardings to a ShapeDtypeStruct pytree."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree, shardings)
+
+
+# --------------------------------------------------------------------------- #
+# train step
+# --------------------------------------------------------------------------- #
+def make_train_step(cfg: ArchConfig, mesh=None, *, scan_chunks: int = 0,
+                    seq_parallel: bool = True, lr: float = 3e-4,
+                    warmup: int = 200, total_steps: int = 20000,
+                    remat: bool = True, unroll: bool = False,
+                    loss_chunk: int = 512):
+    model = LM(cfg)
+    sched = cosine_schedule(lr, warmup, total_steps)
+    con = None
+    pcon = _layer_param_constraint(mesh) if mesh is not None else None
+    if mesh is not None:
+        from repro.models.layers import set_attention_mesh
+        set_attention_mesh(mesh)
+    if mesh is not None and seq_parallel:
+        sp = NamedSharding(mesh, act_spec(mesh))
+        con = lambda h: jax.lax.with_sharding_constraint(h, sp)
+
+    def train_step(state, batch):
+        def loss_fn(p):
+            kw = {}
+            ids = batch.get("ids")
+            if cfg.embeds_in:
+                kw["embeds"] = batch["embeds"]
+            if cfg.cross_attn_every:
+                kw["img_embeds"] = batch["img_embeds"]
+            h, aux = model.apply(p, ids, remat=remat, act_constraint=con,
+                                 param_constraint=pcon,
+                                 scan_chunks=scan_chunks, unroll=unroll, **kw)
+            ce = model.loss(p, h, batch["labels"], batch["mask"],
+                            chunk=loss_chunk)
+            total = ce
+            if cfg.n_experts:
+                total = (total + 1e-2 * aux["load_balance_loss"]
+                         + 1e-3 * aux["router_z_loss"])
+            return total, (ce, aux)
+
+        (_, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        params, opt, om = adamw_update(grads, state["opt"], state["params"],
+                                       lr=sched)
+        metrics = {"loss": ce, **om}
+        if cfg.n_experts:
+            metrics["dropped_frac"] = aux["dropped_frac"]
+        return {"params": params, "opt": opt}, metrics
+
+    return model, train_step
+
+
+def train_state_structs(cfg: ArchConfig, mesh):
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(adamw_init, params)
+    ps = param_shardings(mesh, params)
+    os_ = opt_shardings(mesh, opt, params)
+    state = {"params": with_shardings(mesh, params, ps),
+             "opt": type(opt)(step=with_shardings(mesh, (opt.step), os_.step),
+                              m=with_shardings(mesh, opt.m, os_.m),
+                              v=with_shardings(mesh, opt.v, os_.v))}
+    shardings = {"params": ps, "opt": os_}
+    return state, shardings
+
+
+# --------------------------------------------------------------------------- #
+# serve steps
+# --------------------------------------------------------------------------- #
+def make_prefill_step(cfg: ArchConfig, mesh=None, *, unroll: bool = False):
+    model = LM(cfg)
+    if mesh is not None:
+        from repro.models.layers import set_attention_mesh
+        set_attention_mesh(mesh)
+
+    def prefill_step(params, batch):
+        kw = {}
+        ids = batch.get("ids")
+        if cfg.embeds_in:
+            kw["embeds"] = batch["embeds"]
+        if cfg.cross_attn_every:
+            kw["img_embeds"] = batch["img_embeds"]
+        h, _ = model.apply(params, ids, remat=False, unroll=unroll, **kw)
+        return model.logits(params, h[:, -1:])
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mesh=None, *, unroll: bool = False):
+    model = LM(cfg)
+    pcon = _layer_param_constraint(mesh) if mesh is not None else None
+    if mesh is not None:
+        from repro.models.layers import set_attention_mesh
+        set_attention_mesh(mesh)
+
+    def serve_step(params, cache, batch):
+        kw = {}
+        ids = batch.get("ids")
+        if cfg.embeds_in:
+            kw["embeds"] = batch["embeds"]
+        logits, cache = model.decode_step(params, ids, cache, batch["pos"],
+                                          unroll=unroll,
+                                          param_constraint=pcon, **kw)
+        return logits, cache
+
+    return model, serve_step
+
+
+def serve_structs(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                  serving_layout: bool = False):
+    from .sharding import param_shardings_serving
+    params = abstract_params(cfg)
+    ps = (param_shardings_serving(mesh, params) if serving_layout
+          else param_shardings(mesh, params))
+    out = {"params": with_shardings(mesh, params, ps), "param_shardings": ps}
+    if shape.kind == "decode":
+        cache = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cs = cache_shardings(mesh, cfg, cache)
+        out["cache"] = with_shardings(mesh, cache, cs)
+        out["cache_shardings"] = cs
+    return out

@@ -1,0 +1,5 @@
+"""Model zoo — unified LM stack + the paper's Harris case-study app."""
+from .config import SHAPES, ArchConfig, ShapeConfig, supports_shape
+from .transformer import LM
+
+__all__ = ["LM", "ArchConfig", "ShapeConfig", "SHAPES", "supports_shape"]

@@ -1,0 +1,343 @@
+"""Transformer building blocks — functional, param-dict style (no flax).
+
+Conventions:
+  * params are nested dicts of jax Arrays; layer stacks have leading dim L
+  * compute dtype = config dtype (bf16 on TPU); softmax/norms accumulate f32
+  * attention is GQA with an optional sliding window passed *as data* so a
+    heterogeneous local/global stack (gemma3) remains a uniform lax.scan
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+def _dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RMSNorm
+# --------------------------------------------------------------------------- #
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE (theta passed as data → per-layer theta inside scan)
+# --------------------------------------------------------------------------- #
+def apply_rope(x: jax.Array, pos: jax.Array, theta) -> jax.Array:
+    """x: [..., T, n, hd]; pos: [..., T] absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(-jnp.log(jnp.asarray(theta, jnp.float32))
+                   * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freq          # [..., T, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin
+    y2 = x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention (full / sliding-window / cross), optional KV cache
+# --------------------------------------------------------------------------- #
+def attention_init(key, d: int, n_heads: int, n_kv: int, hd: int, dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(k1, (d, n_heads, hd), dtype),
+        "wk": _dense_init(k2, (d, n_kv, hd), dtype),
+        "wv": _dense_init(k3, (d, n_kv, hd), dtype),
+        "wo": _dense_init(k4, (n_heads * hd, d), dtype),
+    }
+
+
+def expand_kv(kv: jax.Array, n_heads: int) -> jax.Array:
+    """[B, M, KV, hd] → [B, M, H, hd]; q-head h uses kv-head h // (H/KV).
+
+    Two lowerings with identical semantics, chosen by shardability:
+    * KV divides the model axis → reshape-broadcast: the merged KV·G dim
+      inherits KV's sharding, so a model-sharded KV cache expands with
+      ZERO communication (a take() here all-gathers the cache every
+      decode step — observed as the collective-bound gemma3-27b decode).
+    * otherwise (kv=8 on a 16-way axis) → head-index gather from the
+      small replicated kv tensor, shardable on the output H axis.
+    """
+    B, M, KV, hd = kv.shape
+    G = n_heads // KV
+    if _ATTN_MESH is not None and "model" in _ATTN_MESH.axis_names \
+            and KV % _ATTN_MESH.shape["model"] == 0:
+        out = jnp.broadcast_to(kv[:, :, :, None], (B, M, KV, G, hd))
+        return out.reshape(B, M, KV * G, hd)
+    idx = jnp.arange(n_heads, dtype=jnp.int32) // G
+    return jnp.take(kv, idx, axis=2)
+
+
+def gqa_scores(q: jax.Array, k_exp: jax.Array) -> jax.Array:
+    """q: [B, T, H, hd], k_exp: [B, M, H, hd] → scores [B, H, T, M] f32."""
+    hd = q.shape[-1]
+    return jnp.einsum("bthd,bmhd->bhtm", q, k_exp,
+                      preferred_element_type=jnp.float32) / np.sqrt(hd)
+
+
+def gqa_combine(probs: jax.Array, v_exp: jax.Array) -> jax.Array:
+    """probs: [B, H, T, M], v_exp: [B, M, H, hd] → [B, T, H*hd]."""
+    B, H, T, M = probs.shape
+    hd = v_exp.shape[-1]
+    out = jnp.einsum("bhtm,bmhd->bthd", probs, v_exp)
+    return out.reshape(B, T, H * hd)
+
+
+def attn_mask(q_pos: jax.Array, k_pos: jax.Array, window,
+              causal: bool = True) -> jax.Array:
+    """[T, M] bool. window as traced data: 0/negative → unbounded."""
+    d = q_pos[:, None] - k_pos[None, :]
+    m = (d >= 0) if causal else jnp.ones(d.shape, bool)
+    w = jnp.asarray(window, jnp.int32)
+    return m & jnp.where(w > 0, d < w, True)
+
+
+Q_CHUNK = 1024      # query-block size for the memory-efficient path
+
+# Head-parallel attention anchoring.  When a mesh is registered, q/k_exp/
+# v_exp get constrained to [B→batch-axes, T, H→model, hd] so GSPMD runs
+# Megatron-style head-parallel attention (each device: H/model heads × full
+# kv length) instead of drifting to kv-seq sharding, which replicates all
+# H heads per device and blows HBM.  Set by the launch layer at build time.
+_ATTN_MESH = None
+
+
+def set_attention_mesh(mesh) -> None:
+    global _ATTN_MESH
+    _ATTN_MESH = mesh
+
+
+def _con_heads(x: jax.Array) -> jax.Array:
+    """Constrain [B, T, H, hd] to batch×head sharding (divisibility-guarded)."""
+    if _ATTN_MESH is None:
+        return x
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    mesh = _ATTN_MESH
+    B, T, H, hd = x.shape
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nb = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    b_ax = baxes if baxes and B % nb == 0 else None
+    if isinstance(b_ax, tuple) and len(b_ax) == 1:
+        b_ax = b_ax[0]
+    h_ax = "model" if "model" in mesh.axis_names and H % mesh.shape["model"] == 0 else None
+    d_ax = None
+    if h_ax is None and "model" in mesh.axis_names and hd % mesh.shape["model"] == 0:
+        d_ax = "model"          # kv/odd-head fallback: shard head_dim
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b_ax, None, h_ax, d_ax)))
+
+
+def _con_groups(x: jax.Array) -> jax.Array:
+    """Constrain [G, Ng, d] routing groups to G→batch-axes (MoE dispatch)."""
+    if _ATTN_MESH is None:
+        return x
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    mesh = _ATTN_MESH
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nb = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    if not baxes or x.shape[0] % nb:
+        return x
+    b_ax = baxes if len(baxes) > 1 else baxes[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b_ax, None, None)))
+
+
+def _con_experts(x: jax.Array) -> jax.Array:
+    """Constrain [G, E, C, ...] expert buffers to E→model (EP compute).
+
+    Without this anchor the expert FFN einsums drift to replicated-E
+    (every model shard computes all experts — 16x redundant compute,
+    observed as useful-ratio 0.05 in the baseline roofline).
+    """
+    if _ATTN_MESH is None:
+        return x
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    mesh = _ATTN_MESH
+    if "model" not in mesh.axis_names or x.shape[1] % mesh.shape["model"]:
+        return x
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nb = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    b_ax = baxes if baxes and x.shape[0] % nb == 0 else None
+    if isinstance(b_ax, tuple) and len(b_ax) == 1:
+        b_ax = b_ax[0]
+    spec = [b_ax, "model"] + [None] * (x.ndim - 2)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def _con_ff(x: jax.Array) -> jax.Array:
+    """Constrain [B, T, ..., ff] to ff→model (Megatron MLP hidden).
+
+    Forces the wi matmul to keep ff sharded (gathering only the seq dim of
+    the activation), and the wo matmul to contract the sharded ff into a
+    reduce-scatter — instead of GSPMD gathering the full weight AND the
+    full activation when seq- and ff-shardings conflict.
+    """
+    if _ATTN_MESH is None:
+        return x
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    mesh = _ATTN_MESH
+    if "model" not in mesh.axis_names or x.shape[-1] % mesh.shape["model"]:
+        return x
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nb = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    b_ax = baxes if baxes and x.shape[0] % nb == 0 else None
+    if isinstance(b_ax, tuple) and len(b_ax) == 1:
+        b_ax = b_ax[0]
+    spec = [b_ax] + [None] * (x.ndim - 2) + ["model"]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def _attend_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                    k_pos: jax.Array, window, causal: bool,
+                    q_chunk: int) -> jax.Array:
+    """Query-blocked attention: never materializes the full [T, M] probs.
+
+    Scans over query blocks; each block computes a full-width f32 score
+    slab [B, KV, G, qc, M], softmaxes and contracts it, then frees it.
+    The scan body is checkpointed so backward recomputes one slab at a
+    time — the pure-jnp analog of the Pallas flash kernel's tiling.
+    """
+    B, T, H, hd = q.shape
+    nc = T // q_chunk
+    q = _con_heads(q)
+    qc = q.reshape(B, nc, q_chunk, H, hd).swapaxes(0, 1)   # [nc, B, qc, H, hd]
+    k_exp, v_exp = _con_heads(expand_kv(k, H)), _con_heads(expand_kv(v, H))
+
+    def body(_, inp):
+        qi, i = inp
+        q_pos = i * q_chunk + jnp.arange(q_chunk, dtype=jnp.int32)
+        scores = gqa_scores(qi, k_exp)
+        if causal:
+            mask = attn_mask(q_pos, k_pos, window)
+            scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return 0, gqa_combine(probs, v_exp)
+
+    _, out = jax.lax.scan(jax.checkpoint(body), 0,
+                          (qc, jnp.arange(nc, dtype=jnp.int32)))
+    return out.swapaxes(0, 1).reshape(B, T, H * hd)
+
+
+def attention(p: Params, x: jax.Array, pos: jax.Array, *,
+              theta, window=0, kv_x: jax.Array | None = None,
+              cache: Params | None = None, cache_pos=None) -> tuple[jax.Array, Params | None]:
+    """General attention.
+
+    * self-attn (train/prefill): kv_x=None, cache=None → causal (+window)
+    * cross-attn: kv_x = image/frame states, no mask, no rope
+    * decode: cache = {"k","v"} [B, M, KV, hd]; cache_pos = write index;
+      x is [B, 1, d]; returns updated cache
+    """
+    B, T, dm = x.shape
+    q = jnp.einsum("btd,dnh->btnh", x, p["wq"])
+    if kv_x is None:
+        k = jnp.einsum("btd,dnh->btnh", x, p["wk"])
+        v = jnp.einsum("btd,dnh->btnh", x, p["wv"])
+    else:
+        k = jnp.einsum("bmd,dnh->bmnh", kv_x, p["wk"])
+        v = jnp.einsum("bmd,dnh->bmnh", kv_x, p["wv"])
+
+    new_cache = None
+    if cache is not None:                       # decode: one new token
+        q_pos = jnp.full((T,), cache_pos, jnp.int32) + jnp.arange(T, dtype=jnp.int32)
+        q = apply_rope(q, q_pos[None, :], theta)
+        k = apply_rope(k, q_pos[None, :], theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
+                                                 cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
+                                                 cache_pos, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        M = ck.shape[1]
+        H = q.shape[2]
+        k_pos = jnp.arange(M, dtype=jnp.int32)
+        mask = attn_mask(q_pos, k_pos, window)                   # [T, M]
+        scores = gqa_scores(_con_heads(q), _con_heads(expand_kv(ck, H)))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = gqa_combine(probs, _con_heads(expand_kv(cv, H)))
+    elif kv_x is None:                          # train / prefill self-attn
+        q_pos = jnp.arange(T, dtype=jnp.int32)
+        q = apply_rope(q, q_pos[None, :], theta)
+        k = apply_rope(k, q_pos[None, :], theta)
+        if T >= 2 * Q_CHUNK and T % Q_CHUNK == 0:
+            out = _attend_chunked(q, k, v, q_pos, window, True, Q_CHUNK)
+        else:
+            H = q.shape[2]
+            mask = attn_mask(q_pos, q_pos, window)
+            scores = gqa_scores(_con_heads(q), _con_heads(expand_kv(k, H)))
+            scores = jnp.where(mask[None, None], scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            out = gqa_combine(probs, _con_heads(expand_kv(v, H)))
+    else:                                       # cross-attn (no rope/mask)
+        if T >= 2 * Q_CHUNK and T % Q_CHUNK == 0:
+            out = _attend_chunked(q, k, v,
+                                  jnp.arange(k.shape[1], dtype=jnp.int32),
+                                  0, False, Q_CHUNK)
+        else:
+            H = q.shape[2]
+            scores = gqa_scores(_con_heads(q), _con_heads(expand_kv(k, H)))
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            out = gqa_combine(probs, _con_heads(expand_kv(v, H)))
+
+    y = jnp.einsum("btf,fd->btd", out, p["wo"])
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# SwiGLU MLP
+# --------------------------------------------------------------------------- #
+def mlp_init(key, d: int, ff: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"wi": _dense_init(k1, (d, 2, ff), dtype),
+            "wo": _dense_init(k2, (ff, d), dtype)}
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    gu = _con_ff(jnp.einsum("btd,dcf->btcf", x, p["wi"]))
+    g, u = gu[:, :, 0], gu[:, :, 1]
+    h = _con_ff(jax.nn.silu(g) * u)
+    return jnp.einsum("btf,fd->btd", h, p["wo"])
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / LM head
+# --------------------------------------------------------------------------- #
+def embed_init(key, vocab_padded: int, d: int, dtype) -> Params:
+    return {"table": _dense_init(key, (vocab_padded, d), dtype, scale=1.0)}
+
+
+def embed(p: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def lm_logits(p: Params, h: jax.Array, vocab: int) -> jax.Array:
+    logits = jnp.einsum("btd,vd->btv", h, p["table"],
+                        preferred_element_type=jnp.float32)
+    return logits[..., :vocab]

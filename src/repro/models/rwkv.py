@@ -1,0 +1,132 @@
+"""RWKV-6 "Finch" block — attention-free token mixing with data-dependent decay.
+
+Per head (hd=64), the time-mix recurrence over a matrix-valued state S:
+
+    y_t = r_t · (S_{t-1} + (u ∘ k_t) ⊗ v_t)
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+
+where the decay w_t = exp(-exp(wb + lora(x_t))) is *data-dependent* — the
+RWKV-6 signature (arXiv:2404.05892).  Channel-mix is the squared-ReLU FFN.
+Decode carries (S, token-shift) state; everything is a lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+Params = Any
+HEAD_DIM = 64
+
+
+def rwkv_init(key, d: int, ff: int, dtype, lora_rank: int = 32) -> Params:
+    ks = jax.random.split(key, 12)
+    H = d // HEAD_DIM
+    return {
+        # time-mix
+        "mu": jnp.zeros((5, d), jnp.float32),          # shift-mix for r,k,v,w,g
+        "wr": _dense_init(ks[0], (d, d), dtype),
+        "wk": _dense_init(ks[1], (d, d), dtype),
+        "wv": _dense_init(ks[2], (d, d), dtype),
+        "wg": _dense_init(ks[3], (d, d), dtype),
+        "w_bias": jnp.zeros((d,), jnp.float32),
+        "w_lora_a": _dense_init(ks[4], (d, lora_rank), dtype),
+        "w_lora_b": _dense_init(ks[5], (lora_rank, d), dtype, scale=0.01),
+        "u": jnp.zeros((H, HEAD_DIM), jnp.float32),    # bonus
+        "ln_scale": jnp.ones((d,), jnp.float32),       # per-head group norm
+        "wo": _dense_init(ks[6], (d, d), dtype),
+        # channel-mix
+        "mu_c": jnp.zeros((2, d), jnp.float32),
+        "ck": _dense_init(ks[7], (d, ff), dtype),
+        "cv": _dense_init(ks[8], (ff, d), dtype),
+        "cr": _dense_init(ks[9], (d, d), dtype),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array | None) -> jax.Array:
+    """Previous-token sequence shift; `last` is [B, d] carry for decode."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def time_mix(p: Params, x: jax.Array, S0: jax.Array,
+             last: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """x: [B,T,d]; S0: [B,H,hd,hd] f32. Returns (y, S_T)."""
+    B, T, d = x.shape
+    H = d // HEAD_DIM
+    xx = _shift(x, last)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + (xx - x) * mu[i] for i in range(5))
+    r = jnp.einsum("btd,de->bte", xr, p["wr"]).reshape(B, T, H, HEAD_DIM)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"]).reshape(B, T, H, HEAD_DIM)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"]).reshape(B, T, H, HEAD_DIM)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"]))
+    # data-dependent decay (RWKV-6 lora)
+    wlog = p["w_bias"] + jnp.einsum(
+        "btd,dr,re->bte", xw.astype(jnp.float32),
+        p["w_lora_a"].astype(jnp.float32), p["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, T, H, HEAD_DIM)        # (0,1)
+
+    u = p["u"]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                                   # [B,H,hd] each
+        kv = k_t[..., :, None] * v_t[..., None, :]                 # [B,H,hd,hd]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    from .scan_utils import chunked_scan
+    S_T, ys = chunked_scan(step, S0, xs, chunk=256 if T % 256 == 0 else 0)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, d)                    # [B,T,d] f32
+    # per-head group norm
+    yh = y.reshape(B, T, H, HEAD_DIM)
+    yh = (yh - yh.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        yh.var(-1, keepdims=True) + 1e-5)
+    y = (yh.reshape(B, T, d) * p["ln_scale"]).astype(x.dtype) * g
+    return jnp.einsum("btd,de->bte", y, p["wo"]), S_T
+
+
+def channel_mix(p: Params, x: jax.Array, last: jax.Array | None) -> jax.Array:
+    xx = _shift(x, last)
+    mu = p["mu_c"].astype(x.dtype)
+    xk = x + (xx - x) * mu[0]
+    xr = x + (xx - x) * mu[1]
+    k = jnp.einsum("btd,df->btf", xk, p["ck"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("btf,fd->btd", k, p["cv"])
+    return jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["cr"])) * kv
+
+
+def rwkv_block(p: Params, x: jax.Array, norm1, norm2,
+               state: Params | None = None) -> tuple[jax.Array, Params]:
+    """Full RWKV block: time-mix + channel-mix with residuals.
+
+    ``state`` = {"S": [B,H,hd,hd], "tm_last": [B,d], "cm_last": [B,d]}.
+    """
+    from .layers import rmsnorm
+    B, T, d = x.shape
+    H = d // HEAD_DIM
+    if state is None:
+        S0, tm_last, cm_last = (
+            jnp.zeros((B, H, HEAD_DIM, HEAD_DIM), jnp.float32), None, None)
+    else:
+        S0, tm_last, cm_last = state["S"], state["tm_last"], state["cm_last"]
+    h1 = rmsnorm(norm1, x)
+    y, S_T = time_mix(p, h1, S0, tm_last)
+    x = x + y
+    h2 = rmsnorm(norm2, x)
+    x = x + channel_mix(p, h2, cm_last)
+    new_state = {"S": S_T, "tm_last": h1[:, -1], "cm_last": h2[:, -1]}
+    return x, new_state
+
+
+def rwkv_init_state(batch: int, d: int, dtype) -> Params:
+    H = d // HEAD_DIM
+    return {"S": jnp.zeros((batch, H, HEAD_DIM, HEAD_DIM), jnp.float32),
+            "tm_last": jnp.zeros((batch, d), dtype),
+            "cm_last": jnp.zeros((batch, d), dtype)}

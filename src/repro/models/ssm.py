@@ -1,0 +1,100 @@
+"""Selective SSM (Mamba-style) branch — used by the Hymba hybrid block.
+
+Continuous-time selective state space, discretized per token:
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t          (state: [di, N])
+    y_t = C_t . h_t + D * x_t
+
+with input-dependent dt/B/C ("selective").  The sequential form is a
+``lax.scan`` over time; decode carries (conv_state, ssm_state) explicitly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+Params = Any
+
+
+def ssm_init(key, d: int, state: int, conv_k: int, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    di = d                                  # inner dim = d (heads split in hymba)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2, di), dtype),
+        "conv": _dense_init(ks[1], (conv_k, di), dtype, scale=conv_k ** -0.5),
+        "w_dt": _dense_init(ks[2], (di, di), dtype, scale=di ** -0.5),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "w_bc": _dense_init(ks[3], (di, 2, state), dtype),
+        "A_log": jnp.zeros((di, state), jnp.float32),     # A = -exp(A_log) ≤ -1
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 init_state: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv1d. x: [B, T, di], w: [K, di]."""
+    K = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out
+
+
+def _ssm_core(p: Params, xc: jax.Array, h0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """xc: [B, T, di] (post-conv, pre-activation). Returns (y, h_T)."""
+    xc = jax.nn.silu(xc)
+    dt = jax.nn.softplus(jnp.einsum("btd,de->bte", xc, p["w_dt"])
+                         .astype(jnp.float32) + p["dt_bias"])     # [B,T,di]
+    bc = jnp.einsum("btd,dcn->btcn", xc, p["w_bc"]).astype(jnp.float32)
+    Bt, Ct = bc[:, :, 0], bc[:, :, 1]                              # [B,T,N]
+    A = -jnp.exp(p["A_log"])                                       # [di,N]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                                  # [B,di],[B,di],[B,N],[B,N]
+        dA = jnp.exp(dt_t[..., None] * A)                          # [B,di,N]
+        dBx = dt_t[..., None] * b_t[:, None, :] * x_t[..., None].astype(jnp.float32)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bt, 1, 0), jnp.moveaxis(Ct, 1, 0))
+    from .scan_utils import chunked_scan
+    T = xc.shape[1]
+    hT, ys = chunked_scan(step, h0, xs, chunk=256 if T % 256 == 0 else 0)
+    y = jnp.moveaxis(ys, 0, 1) + p["D"] * xc.astype(jnp.float32)   # [B,T,di]
+    return y, hT
+
+
+def ssm_apply(p: Params, x: jax.Array,
+              state: Params | None = None) -> tuple[jax.Array, Params]:
+    """Full-sequence (train/prefill). x: [B,T,d] → (y [B,T,d], state)."""
+    B, T, d = x.shape
+    N = p["A_log"].shape[1]
+    xz = jnp.einsum("btd,dci->btci", x, p["in_proj"])
+    xi, z = xz[:, :, 0], xz[:, :, 1]
+    conv_in = state["conv"] if state is not None else None
+    xc = _causal_conv(xi, p["conv"], conv_in)
+    h0 = state["h"] if state is not None else jnp.zeros((B, d, N), jnp.float32)
+    y, hT = _ssm_core(p, xc, h0)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("btd,de->bte", y, p["out_proj"])
+    K = p["conv"].shape[0]
+    tail = xi[:, -(K - 1):] if T >= K - 1 else jnp.concatenate(
+        [state["conv"][:, T:], xi], axis=1) if state is not None else None
+    new_state = {"h": hT, "conv": tail if tail is not None
+                 else jnp.zeros((B, K - 1, d), x.dtype)}
+    return out, new_state
+
+
+def ssm_init_state(batch: int, d: int, state: int, conv_k: int, dtype) -> Params:
+    return {"h": jnp.zeros((batch, d, state), jnp.float32),
+            "conv": jnp.zeros((batch, conv_k - 1, d), dtype)}

@@ -1,0 +1,414 @@
+"""Unified decoder-only LM covering all assigned architecture families.
+
+Families (selected by ArchConfig fields):
+  dense   — GQA attention + SwiGLU (mistral-large, deepseek, gemma3*, musicgen)
+  moe     — GQA attention + top-k expert FFN (qwen3-moe, moonshot)
+  hybrid  — parallel GQA + selective-SSM heads (hymba)
+  ssm     — RWKV-6 attention-free blocks (rwkv6)
+  vlm     — grouped stack: (k self layers + 1 cross-attn layer) × groups
+            (llama-3.2-vision; image patch embeddings come from the stub
+            frontend per task spec)
+  audio   — dense backbone over precomputed EnCodec frame embeddings
+            (musicgen; stub frontend)
+
+The layer stack is a ``lax.scan`` over stacked params — per-layer
+heterogeneity (sliding window size, rope theta) rides along as scan data, so
+gemma3's 5:1 local:global pattern costs no extra HLO.  Training uses
+``jax.checkpoint`` per layer (remat) and a chunked cross-entropy that never
+materializes the full [B, S, V] logits.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+from .layers import (attention, attention_init, embed, embed_init, lm_logits,
+                     mlp, mlp_init, rmsnorm, rmsnorm_init)
+from .moe import moe_apply, moe_init
+from .rwkv import rwkv_block, rwkv_init, rwkv_init_state
+from .ssm import ssm_apply, ssm_init, ssm_init_state
+
+Params = Any
+
+
+# =========================================================================== #
+# Per-layer block
+# =========================================================================== #
+def _block_init(cfg: ArchConfig, key, cross: bool = False) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p: dict = {"ln1": rmsnorm_init(cfg.d_model, dtype),
+               "ln2": rmsnorm_init(cfg.d_model, dtype)}
+    if cfg.rwkv:
+        p["rwkv"] = rwkv_init(ks[0], cfg.d_model, cfg.d_ff, dtype)
+        return p
+    p["attn"] = attention_init(ks[0], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.hd, dtype)
+    if cfg.hybrid:
+        p["ssm"] = ssm_init(ks[1], cfg.d_model, cfg.ssm_state,
+                            cfg.conv_kernel, dtype)
+    if cfg.n_experts and not cross:
+        p["moe"] = moe_init(ks[2], cfg.d_model, cfg.d_ff, cfg.n_experts, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _zero_aux() -> dict:
+    return {"load_balance_loss": jnp.zeros((), jnp.float32),
+            "router_z_loss": jnp.zeros((), jnp.float32),
+            "dropped_frac": jnp.zeros((), jnp.float32)}
+
+
+def _block_apply(cfg: ArchConfig, p: Params, x: jax.Array, *,
+                 window, theta, img_kv: Params | None = None,
+                 cache: Params | None = None, cache_pos=None,
+                 is_cross: bool = False) -> tuple[jax.Array, Params | None, dict]:
+    """One block. Returns (x, new_cache, aux)."""
+    aux = _zero_aux()
+    if cfg.rwkv:
+        x, new_state = rwkv_block(p["rwkv"], x, p["ln1"], p["ln2"],
+                                  state=cache)
+        return x, new_state, aux
+
+    h = rmsnorm(p["ln1"], x)
+    new_cache: dict = {}
+    if is_cross:
+        # cross-attn layer: kv from image states (dict = precomputed K/V
+        # cached at prefill; array = raw image embeddings)
+        if isinstance(img_kv, dict):
+            a, _ = _cross_from_cache(p, h, img_kv)
+        else:
+            a, _ = attention(p["attn"], h, None, theta=theta, kv_x=img_kv)
+    else:
+        if cache is not None:
+            a, kvc = attention(p["attn"], h, None, theta=theta, window=window,
+                               cache={"k": cache["k"], "v": cache["v"]},
+                               cache_pos=cache_pos)
+            new_cache.update(kvc)
+        else:
+            a, _ = attention(p["attn"], h, None, theta=theta, window=window)
+    if cfg.hybrid:
+        s_state = cache.get("ssm") if cache else None
+        s, s_new = ssm_apply(p["ssm"], h, state=s_state)
+        a = (a + s) * 0.5
+        new_cache["ssm"] = s_new
+    x = x + a
+
+    h2 = rmsnorm(p["ln2"], x)
+    if "moe" in p and not is_cross:
+        y, aux = moe_apply(p["moe"], h2, cfg.top_k, cfg.moe_capacity_factor)
+        aux = {**_zero_aux(), **aux}
+    else:
+        y = mlp(p["mlp"], h2)
+    x = x + y
+    if cache is not None and not is_cross:
+        return x, new_cache, aux
+    return x, (new_cache or None), aux
+
+
+def _cross_from_cache(p: Params, h: jax.Array, img_kv: Params):
+    """Cross-attention against precomputed image K/V."""
+    from .layers import expand_kv, gqa_combine, gqa_scores
+    q = jnp.einsum("btd,dnh->btnh", h, p["attn"]["wq"])
+    H = q.shape[2]
+    scores = gqa_scores(q, expand_kv(img_kv["ck"], H))
+    probs = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+    out = gqa_combine(probs, expand_kv(img_kv["cv"], H))
+    return jnp.einsum("btf,fd->btd", out, p["attn"]["wo"]), None
+
+
+# =========================================================================== #
+# The model
+# =========================================================================== #
+class LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- params -------------------------------------------------------------- #
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        k_emb, k_layers, k_cross = jax.random.split(key, 3)
+        params: dict = {
+            "embed": embed_init(k_emb, cfg.vocab_padded, cfg.d_model, dtype),
+            "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        }
+        if cfg.cross_attn_every:
+            n_groups, per_group = self._vlm_groups()
+            self_keys = jax.random.split(k_layers, n_groups * per_group)
+            params["layers"] = jax.vmap(
+                lambda k: jax.vmap(lambda kk: _block_init(cfg, kk))(k))(
+                self_keys.reshape((n_groups, per_group) + self_keys.shape[1:]))
+            cross_keys = jax.random.split(k_cross, n_groups)
+            params["cross"] = jax.vmap(
+                lambda k: _block_init(cfg, k, cross=True))(cross_keys)
+        else:
+            keys = jax.random.split(k_layers, cfg.n_layers)
+            params["layers"] = jax.vmap(lambda k: _block_init(cfg, k))(keys)
+        return params
+
+    def _vlm_groups(self) -> tuple[int, int]:
+        cfg = self.cfg
+        per = cfg.cross_attn_every
+        if cfg.n_layers % per:
+            raise ValueError(f"n_layers {cfg.n_layers} not divisible by "
+                             f"cross_attn_every {per}")
+        return cfg.n_layers // per, per - 1   # (groups, self layers per group)
+
+    def _layer_meta(self):
+        cfg = self.cfg
+        return (jnp.asarray(cfg.layer_windows),
+                jnp.asarray(cfg.layer_thetas))
+
+    # -- full-sequence forward (train / prefill-as-forward) ------------------- #
+    def apply(self, params: Params, ids: jax.Array | None = None, *,
+              embeds: jax.Array | None = None,
+              img_embeds: jax.Array | None = None,
+              remat: bool = True,
+              act_constraint=None,
+              param_constraint=None,
+              scan_chunks: int = 0,
+              unroll: bool = False) -> tuple[jax.Array, dict]:
+        """→ (hidden [B,S,d], aux). Use :meth:`loss` / :meth:`logits` after.
+
+        ``act_constraint``: optional fn applied to the layer carry (e.g.
+        ``with_sharding_constraint`` for sequence-parallel activations).
+        ``scan_chunks``: nested-remat scan — outer scan of L/c checkpointed
+        chunks, each inner-scanning c layers, bounding saved activations to
+        ~(L/c + c) instead of L (the classic sqrt-remat trade).
+        """
+        cfg = self.cfg
+        con = act_constraint or (lambda h: h)
+        pcon = param_constraint or (lambda p: p)
+        x = embeds if cfg.embeds_in else embed(params["embed"], ids)
+        x = con(x.astype(jnp.dtype(cfg.dtype)))
+
+        if cfg.cross_attn_every:
+            return self._apply_vlm(params, x, img_embeds, remat, con, pcon,
+                                   unroll=unroll)
+
+        windows, thetas = self._layer_meta()
+
+        def body(carry, inp):
+            h, aux = carry
+            lp, w, th = inp
+            # re-anchor the sliced layer weights (keeps the FSDP all-gather
+            # inside the loop instead of a whole-model hoisted gather)
+            h, _, a = _block_apply(cfg, pcon(lp), h, window=w, theta=th)
+            return (con(h), jax.tree.map(jnp.add, aux, a)), None
+
+        xs = (params["layers"], windows, thetas)
+        if scan_chunks and cfg.n_layers % scan_chunks == 0:
+            c = scan_chunks
+            xs = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers // c, c) + a.shape[1:]), xs)
+            # two-level remat: outer chunk AND per-layer body are both
+            # checkpointed — saved state ~(L/c + c) boundaries, transients
+            # bounded by one layer (costs one extra fwd recompute).
+            inner = jax.checkpoint(body) if remat else body
+
+            def chunk_body(carry, chunk):
+                out, _ = jax.lax.scan(inner, carry, chunk)
+                return out, None
+
+            outer = jax.checkpoint(chunk_body) if remat else chunk_body
+            (x, aux), _ = jax.lax.scan(outer, (x, _zero_aux()), xs)
+        else:
+            if remat:
+                body = jax.checkpoint(body)
+            (x, aux), _ = jax.lax.scan(body, (x, _zero_aux()), xs,
+                                       unroll=cfg.n_layers if unroll else 1)
+        x = rmsnorm(params["final_norm"], x)
+        return x, aux
+
+    def _apply_vlm(self, params, x, img_embeds, remat, con=lambda h: h,
+                   pcon=lambda p: p, unroll: bool = False):
+        cfg = self.cfg
+        n_groups, per_group = self._vlm_groups()
+        keep = ~cfg.is_cross_layer
+        w_self = jnp.asarray(cfg.layer_windows[keep].reshape(n_groups, per_group))
+        t_self = jnp.asarray(cfg.layer_thetas[keep].reshape(n_groups, per_group))
+
+        def group(carry, inp):
+            h, aux = carry
+            sp, cp, ws, ts = inp
+
+            def one(c, i):
+                hh, ax = c
+                lp, w, th = i
+                hh, _, a = _block_apply(cfg, pcon(lp), hh, window=w, theta=th)
+                return (con(hh), jax.tree.map(jnp.add, ax, a)), None
+
+            (h, aux), _ = jax.lax.scan(one, (h, aux), (sp, ws, ts))
+            h, _, a = _block_apply(cfg, pcon(cp), h, window=0,
+                                   theta=cfg.rope_theta,
+                                   img_kv=img_embeds, is_cross=True)
+            return (con(h), jax.tree.map(jnp.add, aux, a)), None
+
+        if remat:
+            group = jax.checkpoint(group)
+        (x, aux), _ = jax.lax.scan(
+            group, (x, _zero_aux()),
+            (params["layers"], params["cross"], w_self, t_self),
+            unroll=n_groups if unroll else 1)
+        x = rmsnorm(params["final_norm"], x)
+        return x, aux
+
+    # -- chunked LM loss (never materializes [B,S,V]) -------------------------- #
+    def loss(self, params: Params, hidden: jax.Array, targets: jax.Array,
+             mask: jax.Array | None = None, chunk: int = 512) -> jax.Array:
+        cfg = self.cfg
+        B, S, d = hidden.shape
+        chunk = min(chunk, S)
+        n = S // chunk
+        hs = hidden[:, :n * chunk].reshape(B, n, chunk, d).swapaxes(0, 1)
+        ts = targets[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+        ms = (mask[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+              if mask is not None else jnp.ones_like(ts, jnp.float32))
+        table = params["embed"]["table"]
+
+        def body(carry, inp):
+            h, t, m = inp
+            logits = jnp.einsum("bcd,vd->bcv", h, table,
+                                preferred_element_type=jnp.float32)
+            logits = logits[..., :cfg.vocab]
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+            nll = (lse - gold) * m
+            return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                     (hs, ts, ms))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    def logits(self, params: Params, hidden: jax.Array) -> jax.Array:
+        return lm_logits(params["embed"], hidden, self.cfg.vocab)
+
+    # -- KV cache / serving ----------------------------------------------------- #
+    def init_cache(self, batch: int, cache_len: int) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        if cfg.rwkv:
+            per = rwkv_init_state(batch, cfg.d_model, dtype)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(),
+                per)
+        per = {"k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), dtype),
+               "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), dtype)}
+        if cfg.hybrid:
+            per["ssm"] = ssm_init_state(batch, cfg.d_model, cfg.ssm_state,
+                                        cfg.conv_kernel, dtype)
+        if cfg.cross_attn_every:
+            n_groups, per_group = self._vlm_groups()
+            kv = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (n_groups, per_group) + a.shape).copy(), per)
+            cross = {
+                "ck": jnp.zeros((n_groups, batch, cfg.n_img_tokens,
+                                 cfg.n_kv_heads, cfg.hd), dtype),
+                "cv": jnp.zeros((n_groups, batch, cfg.n_img_tokens,
+                                 cfg.n_kv_heads, cfg.hd), dtype),
+            }
+            return {"self": kv, "cross": cross}
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), per)
+
+    def prefill(self, params: Params, ids: jax.Array | None, cache: Params, *,
+                embeds: jax.Array | None = None,
+                img_embeds: jax.Array | None = None
+                ) -> tuple[jax.Array, Params]:
+        """Fill the cache with the prompt; returns (last-token hidden, cache)."""
+        h, cache = self._forward_cached(params, ids, cache, 0, embeds=embeds,
+                                        img_embeds=img_embeds)
+        return h[:, -1:], cache
+
+    def decode_step(self, params: Params, ids_step: jax.Array | None,
+                    cache: Params, pos, *,
+                    embeds: jax.Array | None = None,
+                    param_constraint=None,
+                    unroll: bool = False) -> tuple[jax.Array, Params]:
+        """One token for every sequence. pos: current cache length (scalar)."""
+        h, cache = self._forward_cached(params, ids_step, cache, pos,
+                                        embeds=embeds, unroll=unroll,
+                                        param_constraint=param_constraint)
+        return self.logits(params, h), cache
+
+    def _forward_cached(self, params, ids, cache, pos, *, embeds=None,
+                        img_embeds=None, unroll: bool = False,
+                        param_constraint=None):
+        cfg = self.cfg
+        pcon = param_constraint or (lambda p: p)
+        x = embeds if cfg.embeds_in else embed(params["embed"], ids)
+        x = x.astype(jnp.dtype(cfg.dtype))
+        pos = jnp.asarray(pos, jnp.int32)
+
+        if cfg.cross_attn_every:
+            return self._forward_cached_vlm(params, x, cache, pos, img_embeds)
+        u = cfg.n_layers if unroll else 1
+        if cfg.rwkv:
+            def body(h, inp):
+                lp, st = inp
+                h, new_st, _ = _block_apply(cfg, pcon(lp), h, window=0,
+                                            theta=0.0, cache=st)
+                return h, new_st
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache),
+                                        unroll=u)
+            x = rmsnorm(params["final_norm"], x)
+            return x, new_cache
+
+        windows, thetas = self._layer_meta()
+
+        def body(h, inp):
+            lp, st, w, th = inp
+            h, new_st, _ = _block_apply(cfg, pcon(lp), h, window=w, theta=th,
+                                        cache=st, cache_pos=pos)
+            return h, new_st
+
+        x, new_cache = jax.lax.scan(body, x,
+                                    (params["layers"], cache, windows, thetas),
+                                    unroll=u)
+        x = rmsnorm(params["final_norm"], x)
+        return x, new_cache
+
+    def _forward_cached_vlm(self, params, x, cache, pos, img_embeds):
+        cfg = self.cfg
+        n_groups, per_group = self._vlm_groups()
+        keep = ~cfg.is_cross_layer
+        w_self = jnp.asarray(cfg.layer_windows[keep].reshape(n_groups, per_group))
+        t_self = jnp.asarray(cfg.layer_thetas[keep].reshape(n_groups, per_group))
+
+        # cross K/V: computed from image embeddings at prefill (img_embeds
+        # given), reused from the cache at decode (img_embeds=None)
+        if img_embeds is not None:
+            def cross_kv(cp):
+                k = jnp.einsum("bmd,dnh->bmnh", img_embeds, cp["attn"]["wk"])
+                v = jnp.einsum("bmd,dnh->bmnh", img_embeds, cp["attn"]["wv"])
+                return {"ck": k, "cv": v}
+            cache = dict(cache)
+            cache["cross"] = jax.vmap(cross_kv)(params["cross"])
+
+        def group(h, inp):
+            sp, cp, st, ckv, ws, ts = inp
+
+            def one(hh, i):
+                lp, s1, w, th = i
+                hh, ns, _ = _block_apply(cfg, lp, hh, window=w, theta=th,
+                                         cache=s1, cache_pos=pos)
+                return hh, ns
+
+            h, new_st = jax.lax.scan(one, h, (sp, st, ws, ts))
+            h, _, _ = _block_apply(cfg, cp, h, window=0, theta=cfg.rope_theta,
+                                   img_kv=ckv, is_cross=True)
+            return h, new_st
+
+        x, new_self = jax.lax.scan(
+            group, x, (params["layers"], params["cross"], cache["self"],
+                       cache["cross"], w_self, t_self))
+        x = rmsnorm(params["final_norm"], x)
+        return x, {"self": new_self, "cross": cache["cross"]}

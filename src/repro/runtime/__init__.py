@@ -1,0 +1,5 @@
+from .driver import (ElasticPlanner, FaultTolerantDriver, StragglerMonitor,
+                     TrainResult)
+
+__all__ = ["ElasticPlanner", "FaultTolerantDriver", "StragglerMonitor",
+           "TrainResult"]

@@ -1,0 +1,159 @@
+"""Distributed runtime — fault tolerance, stragglers, elastic re-planning.
+
+* :class:`FaultTolerantDriver` — checkpoint/restart training loop: periodic
+  (async) checkpoints, automatic reload-and-continue on step failure with
+  bounded retries.  Deterministic data (``batch(step)``) makes the restart
+  bit-exact: a resumed run re-executes the same token stream.
+* :class:`StragglerMonitor` — per-step deadline tracking against a running
+  median; flags and (optionally) re-dispatches slow steps.  On a real pod
+  the re-dispatch hook would reschedule the step on a spare slice; here it
+  re-issues the computation, which also covers transient host stalls.
+* :class:`ElasticPlanner` — the Courier angle on elasticity: when the
+  device count changes, *re-run the Pipeline Generator* to re-balance stage
+  boundaries for the surviving resources (paper's balanced partition, new
+  resource count), instead of aborting the job.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.ir import CourierIR
+from repro.core.partition import PipelinePlan, partition_optimal
+
+
+# --------------------------------------------------------------------------- #
+# Straggler mitigation
+# --------------------------------------------------------------------------- #
+class StragglerMonitor:
+    def __init__(self, threshold: float = 3.0, window: int = 32):
+        self.threshold = threshold
+        self.times: list[float] = []
+        self.window = window
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler (→ caller may re-dispatch)."""
+        hist = self.times[-self.window:]
+        self.times.append(dt)
+        if len(hist) < 8:
+            return False
+        med = float(np.median(hist))
+        if dt > self.threshold * med:
+            self.flagged.append((step, dt))
+            return True
+        return False
+
+
+# --------------------------------------------------------------------------- #
+# Elastic re-planning (Courier re-balance on resource change)
+# --------------------------------------------------------------------------- #
+class ElasticPlanner:
+    """Re-balance pipeline stage boundaries when the stage count changes."""
+
+    def __init__(self, layer_ir: CourierIR):
+        self.layer_ir = layer_ir
+
+    def plan(self, n_stages: int) -> PipelinePlan:
+        return partition_optimal(self.layer_ir, max_stages=n_stages)
+
+    def boundaries(self, n_stages: int) -> list[int]:
+        plan = self.plan(n_stages)
+        bounds, i = [], 0
+        for s in plan.stages:
+            bounds.append(i)
+            i += len(s.node_names)
+        return bounds
+
+
+# --------------------------------------------------------------------------- #
+# Fault-tolerant training driver
+# --------------------------------------------------------------------------- #
+@dataclass
+class TrainResult:
+    steps_done: int
+    final_loss: float
+    restarts: int
+    straggler_redispatches: int
+    losses: list[float] = field(default_factory=list)
+
+
+class FaultTolerantDriver:
+    """Checkpoint/restart loop around a pure ``step_fn(state, batch)``.
+
+    ``step_fn`` returns (new_state, metrics-dict with "loss").
+    ``fail_hook(step)`` is the fault-injection point used by tests (raises
+    to simulate a node failure); production leaves it None and real
+    exceptions (device loss, preemption) take the same path.
+    """
+
+    def __init__(self, step_fn: Callable, store, data, *,
+                 ckpt_every: int = 50, max_restarts: int = 3,
+                 async_ckpt: bool = True,
+                 straggler: StragglerMonitor | None = None,
+                 redispatch_stragglers: bool = False,
+                 fail_hook: Callable[[int], None] | None = None):
+        self.step_fn = step_fn
+        self.store = store
+        self.data = data
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.async_ckpt = async_ckpt
+        self.straggler = straggler or StragglerMonitor()
+        self.redispatch = redispatch_stragglers
+        self.fail_hook = fail_hook
+
+    def run(self, state: Any, n_steps: int) -> tuple[Any, TrainResult]:
+        import jax
+
+        restarts = 0
+        redispatches = 0
+        losses: list[float] = []
+        start = 0
+        # resume from latest checkpoint if one exists
+        latest = self.store.latest_step()
+        if latest is not None:
+            state, extra = self.store.restore(latest, like=state)
+            start = int(extra.get("next_step", latest))
+
+        step = start
+        while step < n_steps:
+            try:
+                if self.fail_hook is not None:
+                    self.fail_hook(step)
+                batch = self.data.batch(step)
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                if self.straggler.record(step, dt) and self.redispatch:
+                    # re-dispatch the same step (pure fn + same batch = safe)
+                    state, metrics = self.step_fn(state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    redispatches += 1
+                losses.append(float(metrics["loss"]))
+                step += 1
+                if step % self.ckpt_every == 0 or step == n_steps:
+                    saver = (self.store.save_async if self.async_ckpt
+                             else self.store.save)
+                    saver(step, state, {"next_step": step})
+            except Exception:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                latest = self.store.latest_step()
+                if latest is None:
+                    step = 0      # restart from scratch
+                    continue
+                self.store.wait()
+                state, extra = self.store.restore(latest, like=state)
+                step = int(extra.get("next_step", latest))
+        self.store.wait()
+        return state, TrainResult(steps_done=step,
+                                  final_loss=losses[-1] if losses else float("nan"),
+                                  restarts=restarts,
+                                  straggler_redispatches=redispatches,
+                                  losses=losses)

@@ -1,0 +1,114 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.harris import convert_scale_abs, corner_harris, cvt_color
+from repro.kernels.rmsnorm import rmsnorm
+from repro.models import harris as mh
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("B,T,H,hd,M", [
+    (1, 128, 1, 64, 128),
+    (2, 256, 4, 64, 256),
+    (1, 512, 2, 128, 512),
+    (2, 128, 4, 32, 384),         # cross-attn style T != M
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, T, H, hd, M, causal, window, dtype):
+    if not causal and T != M:
+        pass        # valid: cross attention
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, M, H, hd), dtype)
+    v = jax.random.normal(ks[2], (B, M, H, hd), dtype)
+    o = flash_attention(q, k, v, causal, window, 128, 128, True)
+    r = ref.reference_attention(q, k, v, causal, window)
+    tol = 2.5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_grads():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 256, 2, 64))
+    k = jax.random.normal(ks[1], (2, 256, 2, 64))
+    v = jax.random.normal(ks[2], (2, 256, 2, 64))
+
+    def f(fn):
+        return lambda q, k, v: jnp.sum(jnp.square(fn(q, k, v)))
+
+    g1 = jax.grad(f(lambda *a: flash_attention(*a, True, 0, 128, 128, True)),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f(lambda *a: ref.reference_attention(*a, True, 0)),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_flash_attention_windowed_grads():
+    ks = jax.random.split(KEY, 3)
+    q, k, v = (jax.random.normal(kk, (1, 256, 2, 64)) for kk in ks)
+    f1 = lambda q, k, v: jnp.sum(flash_attention(q, k, v, True, 128, 128, 128, True) ** 2)
+    f2 = lambda q, k, v: jnp.sum(ref.reference_attention(q, k, v, True, 128) ** 2)
+    g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("H,W", [(8, 128), (64, 256), (33, 130)])
+def test_cvt_color_sweep(H, W):
+    img = jax.random.uniform(KEY, (H, W, 3)) * 255
+    np.testing.assert_allclose(np.asarray(cvt_color(img)),
+                               np.asarray(mh.cvt_color(img)),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("H,W", [(16, 128), (64, 256), (40, 136)])
+@pytest.mark.parametrize("block_size", [2, 3])
+def test_corner_harris_sweep(H, W, block_size):
+    gray = mh.cvt_color(jax.random.uniform(KEY, (H, W, 3)) * 255)
+    got = corner_harris(gray, block_size)
+    want = mh.corner_harris(gray, block_size)
+    scale = float(jnp.max(jnp.abs(want))) + 1e-9
+    np.testing.assert_allclose(np.asarray(got) / scale,
+                               np.asarray(want) / scale, atol=1e-5)
+
+
+@pytest.mark.parametrize("alpha,beta", [(1.0, 0.0), (0.01, 5.0), (-2.0, 100.0)])
+def test_convert_scale_abs_sweep(alpha, beta):
+    x = jax.random.normal(KEY, (32, 128)) * 300
+    np.testing.assert_allclose(np.asarray(convert_scale_abs(x, alpha, beta)),
+                               np.asarray(mh.convert_scale_abs(x, alpha, beta)),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("N,d", [(256, 128), (512, 384), (100, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(N, d, dtype):
+    x = jax.random.normal(KEY, (N, d), dtype)
+    s = (jax.random.normal(KEY, (d,)) * 0.2).astype(dtype)
+    got = rmsnorm(x, s)
+    want = ref.reference_rmsnorm(x, s)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_vmem_working_set_documented():
+    """The fwd kernel's per-program VMEM footprint stays under budget."""
+    from repro.core.costmodel import VMEM_BYTES
+    bq, bk, hd, M = 512, 512, 128, 32768
+    # q block + k/v full-seq refs + f32 acc + score block
+    working = (bq * hd * 2 + 2 * M * hd * 2 + bq * hd * 4 + bq * bk * 4)
+    assert working < VMEM_BYTES

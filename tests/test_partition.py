@@ -1,0 +1,95 @@
+"""Property tests for the Pipeline Generator's partitioners (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (fuse_adjacent_hw, linear_ir, ModuleDatabase,
+                        partition_optimal, partition_paper)
+
+times_strategy = st.lists(
+    st.floats(min_value=0.1, max_value=1000.0, allow_nan=False,
+              allow_infinity=False),
+    min_size=1, max_size=24)
+
+
+def _brute_force_bottleneck(times, k):
+    """Optimal contiguous-partition bottleneck by exhaustive search."""
+    n = len(times)
+    best = float("inf")
+
+    def rec(i, parts_left, cur_best_max):
+        nonlocal best
+        if parts_left == 1:
+            best = min(best, max(cur_best_max, sum(times[i:])))
+            return
+        for j in range(i + 1, n - parts_left + 2):
+            rec(j, parts_left - 1, max(cur_best_max, sum(times[i:j])))
+    rec(0, k, 0.0)
+    return best
+
+
+@settings(max_examples=60, deadline=None)
+@given(times_strategy)
+def test_paper_policy_invariants(times):
+    ir = linear_ir("t", [f"f{i}" for i in range(len(times))], times)
+    plan = partition_paper(ir, n_threads=2)
+    # contiguous cover: every node in exactly one stage, original order
+    names = [n for s in plan.stages for n in s.node_names]
+    assert names == [n.name for n in ir.nodes]
+    # stage times = sum of member times
+    for s in plan.stages:
+        want = sum(ir.node(n).time_ms for n in s.node_names)
+        assert s.est_time_ms == pytest.approx(want)
+    # pipelining never loses throughput vs sequential
+    assert plan.bottleneck_ms <= sum(times) + 1e-9
+    assert plan.predicted_speedup() >= 1.0 - 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(times_strategy)
+def test_optimal_dp_beats_or_ties_paper_policy(times):
+    ir = linear_ir("t", [f"f{i}" for i in range(len(times))], times)
+    paper = partition_paper(ir, n_threads=2)
+    opt = partition_optimal(ir)
+    assert opt.bottleneck_ms <= paper.bottleneck_ms + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(min_value=0.1, max_value=100.0), min_size=1,
+                max_size=9),
+       st.integers(min_value=1, max_value=4))
+def test_optimal_dp_matches_brute_force(times, k):
+    k = min(k, len(times))
+    ir = linear_ir("t", [f"f{i}" for i in range(len(times))], times)
+    opt = partition_optimal(ir, max_stages=k)
+    want = min(_brute_force_bottleneck(times, kk) for kk in range(1, k + 1))
+    assert opt.bottleneck_ms == pytest.approx(want, rel=1e-9)
+
+
+def test_fusion_accepts_fast_rejects_slow():
+    db = ModuleDatabase("t")
+    for f in ("a", "b", "c"):
+        db.register(f, software=lambda x: x, accelerated=lambda x: x)
+    db.register("d", software=lambda x: x)        # sw-only breaks the run
+    ir = linear_ir("t", ["a", "b", "d", "c"], [10.0, 20.0, 5.0, 7.0])
+
+    # estimator says fused(a,b) runs at max(10,20) → accept
+    fused = fuse_adjacent_hw(ir, db, fused_cost_ms=lambda run: 20.0)
+    assert [n.fn_key for n in fused.nodes] == ["a+b", "d", "c"]
+    assert fused.nodes[0].time_ms == pytest.approx(20.0)
+    fused.validate()
+
+    # estimator says fused module is too slow → reject (paper's observed case)
+    kept = fuse_adjacent_hw(ir, db, fused_cost_ms=lambda run: 100.0)
+    assert [n.fn_key for n in kept.nodes] == ["a", "b", "d", "c"]
+
+
+def test_fusion_never_crosses_sw_nodes():
+    db = ModuleDatabase("t")
+    for f in ("a", "b"):
+        db.register(f, software=lambda x: x, accelerated=lambda x: x)
+    db.register("s", software=lambda x: x)
+    ir = linear_ir("t", ["a", "s", "b"], [1.0, 1.0, 1.0])
+    fused = fuse_adjacent_hw(ir, db, fused_cost_ms=lambda run: 0.1)
+    assert [n.fn_key for n in fused.nodes] == ["a", "s", "b"]
