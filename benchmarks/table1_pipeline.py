@@ -1,12 +1,15 @@
 """Paper Table I — processing-time comparison (sequential vs Courier pipeline).
 
-Two parts:
+Three parts:
 1. *Reproduction*: feed the paper's own measured/estimated per-function
    times (Zynq) to our Pipeline Generator and verify it reproduces the
    4-stage plan and the ≈15x speedup the paper measured.
 2. *This system*: trace the actual jnp Harris app on this host, build the
    mixed pipeline (Pallas "hw" modules + jnp "sw" normalize) and measure
-   sequential vs token-pipelined wall time over a frame stream.
+   sequential vs synchronous-wavefront vs async-executor wall time over a
+   multi-frame token stream (with and without per-stage micro-batching).
+3. *Serving*: run the same pipeline behind the dynamic-batching
+   request-queue server and report per-request latency percentiles.
 """
 from __future__ import annotations
 
@@ -59,22 +62,44 @@ def measured_run(n_frames: int = 12, hw: bool = True,
     jax.block_until_ready(off.pipeline(frames[0]))
     jax.block_until_ready(app(frames[0]))
 
-    t0 = time.perf_counter()
-    for f in frames:
-        jax.block_until_ready(app(f))
-    t_seq = (time.perf_counter() - t0) * 1e3
+    def best_ms(f, reps: int = 3) -> float:
+        """min-of-reps wall time (single-shot timings are noisy on a
+        shared 1-2 core container)."""
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f())
+            best = min(best, (time.perf_counter() - t0) * 1e3)
+        return best
 
-    # same compiled stages, no token overlap (isolates the pipelining gain
-    # from the stage-compilation gain, like paper Table I's two columns)
-    t0 = time.perf_counter()
-    for f in frames:
-        jax.block_until_ready(off.pipeline(f))
-    t_seqjit = (time.perf_counter() - t0) * 1e3
+    def run_eager():
+        return [app(f) for f in frames]
 
-    t0 = time.perf_counter()
-    outs = off.map(frames)
-    jax.block_until_ready(outs)
-    t_pipe = (time.perf_counter() - t0) * 1e3
+    def run_staged():
+        # same compiled stages, no token overlap (isolates the pipelining
+        # gain from the stage-compilation gain, like Table I's two columns)
+        return [off.pipeline(f) for f in frames]
+
+    t_seq = best_ms(run_eager)
+    t_seqjit = best_ms(run_staged)
+
+    # async executor (eager issue, bounded pool); pool sized for throughput.
+    # Interleave the wavefront/async reps so both sample the same background
+    # noise (shared-container throughput swings dominate single runs).
+    ex = off.pipeline.executor(max_in_flight=n_frames)
+    jax.block_until_ready(ex.run(frames[:2]))
+    ex.reset_stats()
+    t_pipe = t_async = float("inf")
+    for _ in range(5):
+        t_pipe = min(t_pipe, best_ms(lambda: off.map(frames), reps=1))
+        t_async = min(t_async, best_ms(lambda: ex.run(frames), reps=1))
+    occ = ex.stats().mean_occupancy
+
+    # async executor + per-stage micro-batching (stacked token groups)
+    mb = 4
+    exb = off.pipeline.executor(max_in_flight=n_frames, microbatch=mb)
+    jax.block_until_ready(exb.run(frames[:mb]))
+    t_batched = best_ms(lambda: exb.run(frames))
 
     return [
         ("table1.this_host.sequential_ms_per_frame", t_seq / n_frames,
@@ -82,16 +107,49 @@ def measured_run(n_frames: int = 12, hw: bool = True,
         ("table1.this_host.staged_nopipe_ms_per_frame", t_seqjit / n_frames,
          "compiled stages, no token overlap"),
         ("table1.this_host.pipelined_ms_per_frame", t_pipe / n_frames,
-         f"{off.pipeline.plan.n_stages} stages"),
+         f"{off.pipeline.plan.n_stages} stages, synchronous wavefront run()"),
+        ("table1.this_host.async_ms_per_frame", t_async / n_frames,
+         f"PipelineExecutor, mean occupancy {occ:.1f} tokens"),
+        ("table1.this_host.async_microbatch_ms_per_frame", t_batched / n_frames,
+         f"PipelineExecutor, microbatch={mb}"),
+        ("table1.this_host.async_throughput_fps",
+         round(n_frames / max(t_async / 1e3, 1e-9), 2),
+         "async executor frames/s"),
         ("table1.this_host.speedup_total", round(t_seq / max(t_pipe, 1e-9), 3),
          "vs unmodified app (paper's headline comparison)"),
         ("table1.this_host.speedup_pipelining", round(t_seqjit / max(t_pipe, 1e-9), 3),
          "token overlap only; 1-core container limits true parallelism"),
+        ("table1.this_host.speedup_async_vs_wavefront",
+         round(t_pipe / max(t_async, 1e-9), 3),
+         "async executor vs synchronous wavefront run()"),
+        ("table1.this_host.speedup_async_vs_sequential",
+         round(t_seq / max(t_async, 1e-9), 3),
+         "async executor vs unmodified sequential app"),
+    ]
+
+
+def serving_run(n_requests: int = 24, max_batch: int = 4) -> list[tuple[str, float, str]]:
+    """Dynamic-batching serving loop over the Harris pipeline (latency)."""
+    from repro.launch.serve import serve_pipeline_demo
+
+    stats = serve_pipeline_demo(n_requests=n_requests, max_batch=max_batch,
+                                max_wait_ms=4.0, size=(64, 96))
+    lat = stats["latency_ms"]
+    return [
+        ("table1.serving.requests", stats["requests_served"],
+         f"{stats['batches']} dynamic batches, "
+         f"mean size {stats['mean_batch_size']:.1f}"),
+        ("table1.serving.latency_p50_ms", round(lat["p50"], 2),
+         "per-request (queue + execute)"),
+        ("table1.serving.latency_p95_ms", round(lat["p95"], 2),
+         "per-request (queue + execute)"),
+        ("table1.serving.throughput_rps", round(stats["throughput_rps"], 2),
+         "requests/s, first submit → last completion"),
     ]
 
 
 def run() -> list[tuple[str, float, str]]:
-    return paper_replay() + measured_run()
+    return paper_replay() + measured_run() + serving_run()
 
 
 if __name__ == "__main__":

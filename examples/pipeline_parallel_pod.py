@@ -15,14 +15,20 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
 from repro.core import (CourierIR, Node, linear_ir, partition_optimal,
                         partition_paper, pipeline_microbatches)
 
+try:                                    # AxisType only exists on jax>=0.5
+    from jax.sharding import AxisType
+    _mesh = lambda shape, axes: jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+except ImportError:
+    _mesh = lambda shape, axes: jax.make_mesh(shape, axes)
+
 
 def main():
-    mesh = jax.make_mesh((4,), ("stage",), axis_types=(AxisType.Auto,))
+    mesh = _mesh((4,), ("stage",))
 
     # A 12-layer stack whose second half is 4x wider (cost-heterogeneous,
     # like a vlm's cross-attn tail) — naive equal-count splitting is
@@ -73,7 +79,7 @@ def main():
     # re-balance), not job abort
     from repro.runtime import ElasticPlanner
     b3 = ElasticPlanner(ir).boundaries(3)
-    mesh3 = jax.make_mesh((3,), ("stage",), axis_types=(AxisType.Auto,))
+    mesh3 = _mesh((3,), ("stage",))
     out3 = pipeline_microbatches(mesh3, block, params, b3, xs)
     np.testing.assert_allclose(np.asarray(out3), np.asarray(h),
                                rtol=2e-4, atol=2e-4)

@@ -1,6 +1,15 @@
-"""Batched serving example: prefill + KV-cache decode on a reduced config.
+"""Batched serving examples.
+
+LM mode (default): prefill + KV-cache decode on a reduced config::
 
     PYTHONPATH=src python examples/serve_batched.py --arch gemma3-12b
+
+Pipeline mode: dynamic-batching request-queue server over the Courier
+Harris pipeline (bounded-token-pool backpressure, per-request latency
+stats)::
+
+    PYTHONPATH=src python examples/serve_batched.py --mode pipeline \\
+        --requests 64 --max-batch 8
 """
 import sys
 

@@ -15,6 +15,8 @@ from .costmodel import (CostModel, NodeCost, PEAK_FLOPS_BF16, HBM_BW,
                         attention_cost, elementwise_cost, matmul_cost,
                         measure_ms, stencil_cost)
 from .database import ModuleDatabase, ModuleEntry, default_db
+from .executor import (ExecutorStats, PendingToken, PipelineExecutor,
+                       StageCounters)
 from .ir import CourierIR, Node, Value, linear_ir
 from .offloader import OffloadedFunction, OffloadPlan, courier_offload
 from .partition import (PipelinePlan, StagePlan, fuse_adjacent_hw,
@@ -30,6 +32,7 @@ __all__ = [
     "attention_cost", "elementwise_cost", "matmul_cost", "measure_ms",
     "stencil_cost",
     "ModuleDatabase", "ModuleEntry", "default_db",
+    "ExecutorStats", "PendingToken", "PipelineExecutor", "StageCounters",
     "CourierIR", "Node", "Value", "linear_ir",
     "OffloadedFunction", "OffloadPlan", "courier_offload",
     "PipelinePlan", "StagePlan", "fuse_adjacent_hw", "partition_optimal",

@@ -1,0 +1,441 @@
+"""Asynchronous token-pipeline executor (TBB ``parallel_pipeline`` analog).
+
+:class:`BuiltPipeline.run` emulates TBB's token pipeline with a *synchronous
+wavefront*: a Python loop that advances every in-flight token by one stage
+per host step.  That keeps tokens ordered but serializes the host around the
+wavefront schedule.  This module replaces it with a true asynchronous
+executor that leans on JAX's async dispatch the way TBB leans on its thread
+pool:
+
+* **Eager issue** — when a token is admitted, *all* of its stage calls are
+  issued immediately.  Each jitted stage returns future-backed arrays, so
+  stage ``s+1`` is enqueued on the device stream as soon as stage ``s``'s
+  output futures exist; the host never blocks between stages.  Work for
+  token ``k+1`` is therefore issued while token ``k`` is still executing —
+  the paper's "Task #0 can take the second input while Task #1 is
+  processing".
+* **Bounded token pool** — at most ``max_in_flight`` tokens are
+  issued-but-unretired at any moment (TBB's token pool; default
+  ``n_stages + 1``, the double-buffering minimum).  Admission blocks on the
+  *oldest* token's final outputs when the pool is full, which is also the
+  serving layer's backpressure mechanism.  ``max_in_flight`` must be >= 1;
+  ``0`` is rejected rather than silently treated as "unset".
+* **Per-stage micro-batching** — consecutive tokens whose input
+  shapes/dtypes agree can be stacked along a new leading axis and pushed
+  through ``jax.vmap``-ed stage functions as one group, amortizing dispatch
+  overhead (``microbatch=m``).  Results are unstacked at retirement, so the
+  API is token-in/token-out either way.
+* **Counters** — per-stage issue counts/host-issue time and pool occupancy
+  are tracked continuously; :meth:`PipelineExecutor.stats` exposes
+  throughput and occupancy for the serving layer's metrics endpoint.
+
+Completion is in-order (tokens retire oldest-first), matching the paper's
+``serial_in_order`` first/last filters.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PipelineExecutor", "ExecutorStats", "StageCounters",
+           "PendingToken", "SubmitError"]
+
+
+class SubmitError(RuntimeError):
+    """A submit_many call failed after part of the stream was admitted.
+
+    ``handles`` are PendingTokens for the prefix of the token stream that
+    WAS issued (possibly empty); everything from index ``len(handles)``
+    onward was not admitted.  ``__cause__`` carries the original error.
+    """
+
+    def __init__(self, msg: str, handles: list["PendingToken"]):
+        super().__init__(msg)
+        self.handles = handles
+
+
+# --------------------------------------------------------------------------- #
+# Counters
+# --------------------------------------------------------------------------- #
+@dataclass
+class StageCounters:
+    """Per-stage issue-side counters (host view; device time is async)."""
+
+    issued: int = 0        # stage invocations (one per token group)
+    tokens: int = 0        # tokens pushed through this stage
+    issue_ms: float = 0.0  # host time spent dispatching this stage
+
+    def as_dict(self) -> dict:
+        return {"issued": self.issued, "tokens": self.tokens,
+                "issue_ms": round(self.issue_ms, 4)}
+
+
+@dataclass
+class ExecutorStats:
+    """Snapshot of executor activity since construction (or ``reset``)."""
+
+    per_stage: list[StageCounters] = field(default_factory=list)
+    tokens_admitted: int = 0
+    tokens_retired: int = 0
+    groups_admitted: int = 0
+    max_in_flight_seen: int = 0
+    occupancy_samples: int = 0
+    occupancy_sum: int = 0
+    wall_ms: float = 0.0           # accumulated blocking run() wall time
+
+    @property
+    def mean_occupancy(self) -> float:
+        if not self.occupancy_samples:
+            return 0.0
+        return self.occupancy_sum / self.occupancy_samples
+
+    @property
+    def throughput_tps(self) -> float:
+        """Retired tokens per second over the accumulated ``run`` wall time."""
+        if self.wall_ms <= 0:
+            return 0.0
+        return self.tokens_retired / (self.wall_ms / 1e3)
+
+    def as_dict(self) -> dict:
+        return {
+            "tokens_admitted": self.tokens_admitted,
+            "tokens_retired": self.tokens_retired,
+            "groups_admitted": self.groups_admitted,
+            "max_in_flight_seen": self.max_in_flight_seen,
+            "mean_occupancy": round(self.mean_occupancy, 3),
+            "wall_ms": round(self.wall_ms, 3),
+            "throughput_tps": round(self.throughput_tps, 2),
+            "per_stage": [s.as_dict() for s in self.per_stage],
+        }
+
+
+# --------------------------------------------------------------------------- #
+# In-flight bookkeeping
+# --------------------------------------------------------------------------- #
+class _Group:
+    """One admitted token group: a (possibly stacked) env fully issued."""
+
+    __slots__ = ("env", "size", "stacked", "results", "done", "error", "lock")
+
+    def __init__(self, env: dict | None, size: int, stacked: bool):
+        self.env = env                # None until all stages are issued
+        self.size = size              # real tokens (padding rows excluded)
+        self.stacked = stacked
+        self.results: list[Any] | None = None
+        self.done = False
+        self.error: BaseException | None = None   # stage issue failed
+        self.lock = threading.Lock()  # serializes issue + finalization
+
+
+class PendingToken:
+    """Future-like handle for one submitted token (in-order completion)."""
+
+    __slots__ = ("_executor", "_group", "_idx")
+
+    def __init__(self, executor: "PipelineExecutor", group: _Group, idx: int):
+        self._executor = executor
+        self._group = group
+        self._idx = idx
+
+    def done(self) -> bool:
+        return self._group.done
+
+    def result(self) -> Any:
+        """Block until this token's final outputs are ready and return them."""
+        self._executor._retire_through(self._group)
+        if self._group.error is not None:
+            raise self._group.error
+        return self._group.results[self._idx]
+
+
+# --------------------------------------------------------------------------- #
+# The executor
+# --------------------------------------------------------------------------- #
+class PipelineExecutor:
+    """Async token-pipeline executor over compiled stage functions.
+
+    Parameters
+    ----------
+    stage_fns:
+        One callable per stage, ``dict(live-in) -> dict(live-out)`` (the
+        output of :func:`repro.core.pipeline.make_stage_fns`).
+    graph_inputs / graph_outputs:
+        Value names binding positional token args to the stage-0 env and the
+        final env to results.
+    max_in_flight:
+        Token-pool bound (>= 1).  ``None`` defaults to ``n_stages + 1``.
+    microbatch:
+        Max tokens stacked into one group when their shapes/dtypes agree
+        (1 disables batching).  Groups never exceed the pool size.
+    pad_microbatches:
+        When True, ragged groups (size < ``microbatch``) are padded to the
+        full micro-batch size by repeating the last token, so the vmapped
+        stage executables compile for exactly one leading-axis size —
+        serving loops use this to keep partial batches off the compile
+        path.  Padding rows are dropped at retirement.
+    """
+
+    def __init__(self, stage_fns: Sequence[Callable],
+                 graph_inputs: Sequence[str], graph_outputs: Sequence[str],
+                 *, max_in_flight: int | None = None, microbatch: int = 1,
+                 pad_microbatches: bool = False):
+        if max_in_flight is not None and max_in_flight < 1:
+            raise ValueError(
+                f"max_in_flight must be >= 1 (got {max_in_flight}); "
+                "use None for the default pool of n_stages + 1")
+        if microbatch < 1:
+            raise ValueError(f"microbatch must be >= 1 (got {microbatch})")
+        self.stage_fns = list(stage_fns)
+        self.graph_inputs = list(graph_inputs)
+        self.graph_outputs = list(graph_outputs)
+        self.pool = max_in_flight if max_in_flight is not None \
+            else len(self.stage_fns) + 1
+        self.microbatch = min(microbatch, self.pool)
+        self.pad_microbatches = pad_microbatches and self.microbatch > 1
+        self._batched_fns: list[Callable] | None = None   # lazy vmap+jit
+        self._inflight: deque[_Group] = deque()
+        self._occupancy = 0               # live (non-retired) tokens
+        self._lock = threading.RLock()
+        self._stats = ExecutorStats(
+            per_stage=[StageCounters() for _ in self.stage_fns])
+
+    # -- construction helpers ------------------------------------------------ #
+    @classmethod
+    def from_pipeline(cls, pipe, *, max_in_flight: int | None = None,
+                      microbatch: int = 1,
+                      pad_microbatches: bool = False) -> "PipelineExecutor":
+        """Build from a :class:`repro.core.pipeline.BuiltPipeline`."""
+        mif = max_in_flight if max_in_flight is not None else pipe.max_in_flight
+        return cls(pipe.stage_fns, pipe.graph_inputs, pipe.graph_outputs,
+                   max_in_flight=mif, microbatch=microbatch,
+                   pad_microbatches=pad_microbatches)
+
+    # -- public API ---------------------------------------------------------- #
+    def submit(self, *args: Any) -> PendingToken:
+        """Admit one token (backpressure: blocks while the pool is full)."""
+        return self.submit_many([args])[0]
+
+    def submit_many(self, tokens: Iterable[tuple | Any]) -> list[PendingToken]:
+        """Admit a token stream, micro-batching compatible neighbors.
+
+        All stages of each admitted group are issued immediately (JAX async
+        dispatch); the call blocks only when the token pool is full, and
+        then only on the oldest group's final outputs.  Malformed tokens
+        (wrong arity) are rejected up front, before ANY token is admitted,
+        so a plain ValueError implies nothing was issued.  A later failure
+        (e.g. a shape that breaks jit tracing at stage-issue time) raises
+        :class:`SubmitError` carrying the handles of the prefix that WAS
+        admitted, so callers never lose — or double-issue — work that is
+        already on the device.
+        """
+        toks = [t if isinstance(t, tuple) else (t,) for t in tokens]
+        for i, t in enumerate(toks):
+            if len(t) != len(self.graph_inputs):
+                raise ValueError(
+                    f"token {i}: expected {len(self.graph_inputs)} inputs, "
+                    f"got {len(t)}")
+        handles: list[PendingToken] = []
+        for group_toks in self._group_tokens(toks):
+            try:
+                handles.extend(self._admit(group_toks))
+            except BaseException as e:
+                raise SubmitError(
+                    f"submit failed at token {len(handles)}: {e}",
+                    handles) from e
+        return handles
+
+    def run(self, tokens: Iterable[tuple | Any]) -> list[Any]:
+        """Blocking map over a token stream; results in submission order."""
+        t0 = time.perf_counter()
+        handles = self.submit_many(tokens)
+        out = [h.result() for h in handles]
+        with self._lock:
+            self._stats.wall_ms += (time.perf_counter() - t0) * 1e3
+        return out
+
+    def drain(self) -> None:
+        """Block until every in-flight token has retired."""
+        with self._lock:
+            last = self._inflight[-1] if self._inflight else None
+        if last is not None:
+            self._retire_through(last)
+
+    def warmup(self, *args: Any) -> None:
+        """Compile the per-token and (if batching) vmapped stage
+        executables for one example token, blocking until ready."""
+        self.submit(*args).result()
+        if self.microbatch > 1:
+            n = self.microbatch
+            for h in self.submit_many([args] * n):
+                h.result()
+        self.reset_stats()
+
+    def stats(self) -> ExecutorStats:
+        return self._stats
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            self._stats = ExecutorStats(
+                per_stage=[StageCounters() for _ in self.stage_fns])
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return self._occupancy
+
+    # -- internals ----------------------------------------------------------- #
+    def _group_tokens(self, toks: list[tuple]) -> Iterable[list[tuple]]:
+        """Split the stream into runs of shape-compatible tokens (<= mb)."""
+        if self.microbatch <= 1:
+            for t in toks:
+                yield [t]
+            return
+        cur: list[tuple] = []
+        cur_sig: tuple | None = None
+        for t in toks:
+            sig = tuple((tuple(jnp.shape(a)), jnp.result_type(a).name)
+                        for a in t)
+            if cur and (sig != cur_sig or len(cur) >= self.microbatch):
+                yield cur
+                cur = []
+            cur.append(t)
+            cur_sig = sig
+        if cur:
+            yield cur
+
+    def _env_of(self, args: Sequence[Any]) -> dict:
+        if len(args) != len(self.graph_inputs):
+            raise ValueError(f"expected {len(self.graph_inputs)} inputs, "
+                             f"got {len(args)}")
+        return dict(zip(self.graph_inputs, args))
+
+    def _out_of(self, env: dict):
+        outs = tuple(env[o] for o in self.graph_outputs)
+        return outs[0] if len(outs) == 1 else outs
+
+    def _stage_fns_for(self, size: int) -> list[Callable]:
+        if size == 1:
+            return self.stage_fns
+        if self._batched_fns is None:
+            # vmap over the env dict (a pytree of per-token arrays); jit so
+            # repeated group sizes reuse the compiled executable.
+            self._batched_fns = [jax.jit(jax.vmap(f)) for f in self.stage_fns]
+        return self._batched_fns
+
+    def _admit(self, group_toks: list[tuple]) -> list[PendingToken]:
+        size = len(group_toks)
+        pad = (self.microbatch - size) if (self.pad_microbatches
+                                           and size < self.microbatch) else 0
+        stacked = size > 1 or pad > 0
+        if stacked:
+            # repeat the last token into the padding rows so every group
+            # compiles (and reuses) the same [microbatch, ...] executable
+            rows = group_toks + [group_toks[-1]] * pad
+            args = tuple(jnp.stack(c) for c in zip(*rows))
+        else:
+            args = group_toks[0]
+        env = self._env_of(args)
+
+        # 1) reserve a pool slot.  The group is published with env=None and
+        #    its per-group lock held, so finalizers queue on g.lock until
+        #    issue completes — the executor lock itself is only held for
+        #    O(us) bookkeeping, never across a jit trace/compile.
+        g = _Group(None, size, stacked)
+        g.lock.acquire()
+        while True:
+            with self._lock:
+                if not self._inflight or self._occupancy + size <= self.pool:
+                    self._inflight.append(g)
+                    self._occupancy += size
+                    self._stats.tokens_admitted += size
+                    self._stats.groups_admitted += 1
+                    self._stats.max_in_flight_seen = max(
+                        self._stats.max_in_flight_seen, self._occupancy)
+                    self._stats.occupancy_samples += 1
+                    self._stats.occupancy_sum += self._occupancy
+                    break
+                oldest = self._inflight[0]
+            # backpressure: pool full — retire the oldest group.  The device
+            # wait happens OUTSIDE self._lock so concurrent retirers
+            # (serving threads) never stall admission behind it.
+            self._finalize(oldest)
+
+        # 2) issue every stage outside the executor lock (the first call of
+        #    a new group size pays the vmap+jit trace here)
+        try:
+            fns = self._stage_fns_for(size + pad if stacked else 1)
+            counters = []
+            for si, fn in enumerate(fns):
+                t0 = time.perf_counter()
+                env = fn(env)       # returns immediately (async dispatch)
+                counters.append((si, (time.perf_counter() - t0) * 1e3))
+            g.env = env
+        except BaseException as e:
+            # unwind the reservation so the failed group neither blocks the
+            # pool nor surfaces bogus results
+            g.error = e
+            g.done = True
+            with self._lock:
+                self._occupancy -= size
+                self._stats.tokens_admitted -= size
+                self._stats.groups_admitted -= 1
+                try:
+                    self._inflight.remove(g)
+                except ValueError:
+                    pass
+            raise
+        finally:
+            g.lock.release()
+        with self._lock:
+            for si, ms in counters:
+                c = self._stats.per_stage[si]
+                c.issued += 1
+                c.tokens += size
+                c.issue_ms += ms
+        return [PendingToken(self, g, i) for i in range(size)]
+
+    def _retire_through(self, group: _Group) -> None:
+        """Finalize ``group`` and everything older (in-order retirement)."""
+        while not group.done:
+            with self._lock:
+                if group.done or not self._inflight:
+                    break
+                oldest = self._inflight[0]
+            self._finalize(oldest)
+
+    def _finalize(self, g: _Group) -> None:
+        """Block on a group's final outputs and unstack them.
+
+        Idempotent; callable from any thread.  The executor lock is NOT
+        held across the device wait — only the per-group lock serializes
+        double-finalization, so admission can proceed while a serving
+        thread blocks here.
+        """
+        finalized_here = False
+        with g.lock:
+            if not g.done:
+                out = self._out_of(g.env)
+                jax.block_until_ready(out)
+                if g.stacked:
+                    if isinstance(out, tuple):
+                        g.results = [tuple(o[i] for o in out)
+                                     for i in range(g.size)]
+                    else:
+                        g.results = [out[i] for i in range(g.size)]
+                else:
+                    g.results = [out]
+                g.done = True
+                finalized_here = True
+        with self._lock:
+            if finalized_here:           # exactly-once accounting per group
+                self._stats.tokens_retired += g.size
+                self._occupancy -= g.size
+            # drop retired groups from the head (in-order by design)
+            while self._inflight and self._inflight[0].done:
+                self._inflight.popleft()

@@ -75,6 +75,10 @@ class Node:
     bytes_rw: float | None = None
     placement: str = "unassigned"          # "hw" | "sw" | "unassigned"
     fused_from: list[str] = field(default_factory=list)  # names of fused originals
+    # per-part input shapes recorded at fusion time, one list per fused part;
+    # lets the backend re-check shape-gated hw applicability per part when it
+    # resolves the fused node's implementations (empty for unfused nodes).
+    fused_input_shapes: list[list[tuple[int, ...]]] = field(default_factory=list)
 
 
 # --------------------------------------------------------------------------- #

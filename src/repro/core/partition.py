@@ -264,7 +264,9 @@ def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
                     inputs=list(run[0].inputs),
                     outputs=list(run[-1].outputs),
                     params={}, time_ms=est, placement="hw",
-                    fused_from=[n.name for n in run])
+                    fused_from=[n.name for n in run],
+                    fused_input_shapes=[
+                        [ir.values[i].shape for i in n.inputs] for n in run])
                 new_nodes.append(fused)
                 i = j + 1
                 continue

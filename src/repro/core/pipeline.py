@@ -19,6 +19,16 @@ JAX's async dispatch provides the overlap TBB gets from its thread pool:
 each stage call on a token returns immediately with futures, so stage s can
 be issued for token k+1 while token k is still executing downstream — the
 paper's "Task #0 can take the second input while Task #1 is processing".
+
+Two token-stream execution paths are exposed:
+
+* ``BuiltPipeline.run``       — the original synchronous wavefront schedule
+  (host steps every in-flight token one stage at a time); kept as the
+  paper-faithful baseline.
+* ``BuiltPipeline.run_async`` / ``BuiltPipeline.executor()`` — the true
+  asynchronous executor (:mod:`repro.core.executor`): eager stage issue,
+  bounded token pool, optional per-stage micro-batching, throughput and
+  occupancy counters.  This is the serving-layer fast path.
 """
 from __future__ import annotations
 
@@ -85,8 +95,7 @@ def _liveness(ir: CourierIR, plan: PipelinePlan) -> list[list[str]]:
         for v in produced:
             needed = any(
                 name_to_stage.get(c, -1) >= k for c in ir.values[v].consumers
-            ) or (k < plan.n_stages and v in ir.graph_outputs) \
-              or (k == plan.n_stages and v in ir.graph_outputs)
+            ) or v in ir.graph_outputs
             if needed:
                 live.append(v)
         boundaries.append(sorted(live))
@@ -95,9 +104,14 @@ def _liveness(ir: CourierIR, plan: PipelinePlan) -> list[list[str]]:
 
 def _resolve_impl(node: Node, ir: CourierIR, db: ModuleDatabase) -> Callable:
     if node.fused_from:
-        # fused node "a+b": compose the accelerated impls of the parts
+        # fused node "a+b": compose the impls of the parts, re-checking each
+        # part's shape-gated hw applicability against the input shapes it
+        # actually sees (recorded at fusion time) — resolving without shapes
+        # would pick hw even for shapes the module's `applicable` rejects.
         keys = node.fn_key.split("+")
-        impls = [db.resolve(k, prefer_hw=True)[0] for k in keys]
+        part_shapes = node.fused_input_shapes or [[] for _ in keys]
+        impls = [db.resolve(k, *ps, prefer_hw=True)[0]
+                 for k, ps in zip(keys, part_shapes)]
 
         def fused(*args: Any):
             out = args
@@ -169,7 +183,7 @@ class BuiltPipeline:
         toks = [t if isinstance(t, tuple) else (t,) for t in tokens]
         n = len(toks)
         S = len(self.stage_fns)
-        pool = self.max_in_flight or (S + 1)
+        pool = self._validated_pool()
         envs: dict[int, Any] = {}
         done: dict[int, Any] = {}
         next_tok = 0
@@ -195,10 +209,45 @@ class BuiltPipeline:
         """No pipelining — the original binary's behavior (baseline)."""
         return [self(*t) if isinstance(t, tuple) else self(t) for t in tokens]
 
+    # -- async executor (TBB parallel_pipeline analog) ----------------------- #
+    def executor(self, *, max_in_flight: int | None = None,
+                 microbatch: int = 1,
+                 pad_microbatches: bool = False) -> "PipelineExecutor":
+        """Build a :class:`~repro.core.executor.PipelineExecutor` over the
+        compiled stages (bounded token pool, eager async issue, optional
+        per-stage micro-batching).  ``max_in_flight`` defaults to this
+        pipeline's own setting; the executor validates it (>= 1)."""
+        from .executor import PipelineExecutor
+        return PipelineExecutor.from_pipeline(
+            self, max_in_flight=max_in_flight, microbatch=microbatch,
+            pad_microbatches=pad_microbatches)
+
+    def run_async(self, tokens: Iterable[tuple | Any], *,
+                  max_in_flight: int | None = None,
+                  microbatch: int = 1) -> list[Any]:
+        """Run a token stream through the asynchronous executor.
+
+        Unlike :meth:`run` (the synchronous wavefront), every stage of an
+        admitted token is issued immediately and the host blocks only when
+        the token pool is full or at final retirement.  Results arrive in
+        submission order, identical to :meth:`run`/:meth:`run_sequential`.
+        """
+        return self.executor(max_in_flight=max_in_flight,
+                             microbatch=microbatch).run(tokens)
+
     def describe(self) -> str:
         return self.plan.describe()
 
     # -- helpers ------------------------------------------------------------ #
+    def _validated_pool(self) -> int:
+        """Token-pool size; ``max_in_flight=0`` is an error, not "unset"."""
+        if self.max_in_flight is not None and self.max_in_flight < 1:
+            raise ValueError(
+                f"max_in_flight must be >= 1 (got {self.max_in_flight}); "
+                "use None for the default pool of n_stages + 1")
+        S = len(self.stage_fns)
+        return self.max_in_flight if self.max_in_flight is not None else S + 1
+
     def _env_of(self, args: Sequence[Any]) -> dict:
         if len(args) != len(self.graph_inputs):
             raise ValueError(f"expected {len(self.graph_inputs)} inputs, "

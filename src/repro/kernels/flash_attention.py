@@ -49,10 +49,10 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *,
 
     def body(j, carry):
         acc, m_i, l_i = carry
-        k = pl.load(k_ref, (0, pl.ds(j * bk, bk), slice(None))
-                    ).astype(jnp.float32)               # [bk, hd]
-        v = pl.load(v_ref, (0, pl.ds(j * bk, bk), slice(None))
-                    ).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.ds(0, 1), pl.ds(j * bk, bk), slice(None))
+                    )[0].astype(jnp.float32)            # [bk, hd]
+        v = pl.load(v_ref, (pl.ds(0, 1), pl.ds(j * bk, bk), slice(None))
+                    )[0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # [bq, bk]
         k_pos = j * bk + jax.lax.iota(jnp.int32, bk)
         d = q_pos[:, None] - k_pos[None, :]
@@ -128,8 +128,10 @@ def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
     q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)
 
     def body(j, dq):
-        k = pl.load(k_ref, (0, pl.ds(j * bk, bk), slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.ds(j * bk, bk), slice(None))).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.ds(0, 1), pl.ds(j * bk, bk),
+                            slice(None)))[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(0, 1), pl.ds(j * bk, bk),
+                            slice(None)))[0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
         k_pos = j * bk + jax.lax.iota(jnp.int32, bk)
         d = q_pos[:, None] - k_pos[None, :]
@@ -162,12 +164,12 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
     def body(i, carry):
         dk, dv = carry
-        q = pl.load(q_ref, (0, pl.ds(i * bq, bq), slice(None))
-                    ).astype(jnp.float32) * scale
-        do = pl.load(do_ref, (0, pl.ds(i * bq, bq), slice(None))
-                     ).astype(jnp.float32)
-        lse = pl.load(lse_ref, (0, pl.ds(i * bq, bq)))
-        delta = pl.load(delta_ref, (0, pl.ds(i * bq, bq)))
+        q = pl.load(q_ref, (pl.ds(0, 1), pl.ds(i * bq, bq), slice(None))
+                    )[0].astype(jnp.float32) * scale
+        do = pl.load(do_ref, (pl.ds(0, 1), pl.ds(i * bq, bq), slice(None))
+                     )[0].astype(jnp.float32)
+        lse = pl.load(lse_ref, (pl.ds(0, 1), pl.ds(i * bq, bq)))[0]
+        delta = pl.load(delta_ref, (pl.ds(0, 1), pl.ds(i * bq, bq)))[0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
         q_pos = i * bq + jax.lax.iota(jnp.int32, bq)
         d = q_pos[:, None] - k_pos[None, :]

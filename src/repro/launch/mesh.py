@@ -6,15 +6,24 @@ touches jax device state (the dry-run must set XLA_FLAGS first).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                    # AxisType only exists on jax>=0.5
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def _mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_pipeline_mesh(*, n_stages: int = 4, multi_pod: bool = False):
@@ -29,11 +38,8 @@ def make_pipeline_mesh(*, n_stages: int = 4, multi_pod: bool = False):
     if n_stages * tp != 16:
         raise ValueError("n_stages must divide 16")
     if multi_pod:
-        return jax.make_mesh((2, 16, n_stages, tp),
-                             ("pod", "data", "stage", "model"),
-                             axis_types=(AxisType.Auto,) * 4)
-    return jax.make_mesh((16, n_stages, tp), ("data", "stage", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+        return _mesh((2, 16, n_stages, tp), ("pod", "data", "stage", "model"))
+    return _mesh((16, n_stages, tp), ("data", "stage", "model"))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

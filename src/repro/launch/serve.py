@@ -1,28 +1,296 @@
-"""Serving launcher — batched prefill + decode driver (deliverable b).
+"""Serving launcher — LM decode driver + pipeline request-queue server.
 
-    python -m repro.launch.serve --arch rwkv6-1.6b --reduced --tokens 32
+Two serving modes:
+
+* ``lm`` (default) — batched prefill + KV-cache decode on a reduced LM
+  config (deliverable b)::
+
+      python -m repro.launch.serve --arch rwkv6-1.6b --reduced --tokens 32
+
+* ``pipeline`` — a request-queue serving loop over a Courier-built token
+  pipeline (the ROADMAP's "serve heavy traffic" front-end)::
+
+      python -m repro.launch.serve --mode pipeline --requests 64
+
+  :class:`RequestQueueServer` accepts single-token requests, forms dynamic
+  batches (up to ``max_batch``, waiting at most ``max_wait_ms`` after the
+  first request of a batch), and feeds them to a
+  :class:`~repro.core.executor.PipelineExecutor`.  Backpressure comes from
+  the executor's bounded token pool: the batcher blocks inside ``submit_many``
+  while the pool is full, which in turn fills the bounded request queue and
+  blocks producers.  Per-request latency (queue + execute) is recorded and
+  summarized by :meth:`RequestQueueServer.stats`.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
+from dataclasses import dataclass, field
+from queue import Empty, Queue
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core.executor import PipelineExecutor
 from repro.models import LM
+
+
+# --------------------------------------------------------------------------- #
+# Request-queue serving loop over a token-pipeline executor
+# --------------------------------------------------------------------------- #
+@dataclass
+class Request:
+    """One in-flight serving request with its latency timeline."""
+
+    args: tuple
+    t_submit: float
+    t_batch: float | None = None      # when the batcher picked it up
+    t_done: float | None = None       # when its outputs were ready
+    result: Any = None
+    error: BaseException | None = None
+    _event: threading.Event = field(default_factory=threading.Event)
+
+    def wait(self, timeout: float | None = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not served within timeout")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+    @property
+    def latency_ms(self) -> float | None:
+        if self.t_done is None:
+            return None
+        return (self.t_done - self.t_submit) * 1e3
+
+    @property
+    def queue_ms(self) -> float | None:
+        if self.t_batch is None:
+            return None
+        return (self.t_batch - self.t_submit) * 1e3
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+class RequestQueueServer:
+    """Dynamic-batching serving loop over a :class:`PipelineExecutor`.
+
+    A batcher thread collects requests into batches of at most ``max_batch``,
+    waiting up to ``max_wait_ms`` after a batch's first request before
+    dispatching a partial batch (the max-wait deadline trades latency for
+    batching efficiency).  Batches are issued asynchronously via
+    ``executor.submit_many`` (micro-batched when shapes agree) and retired
+    by a separate completion thread, so batch ``k+1`` is collected and
+    issued while batch ``k`` is still executing — throughput is bounded by
+    the executor's token pool, which is also the backpressure signal:
+    ``submit`` blocks once ``queue_depth`` (default: pool size) requests
+    are waiting.
+    """
+
+    def __init__(self, executor: PipelineExecutor, *, max_batch: int = 8,
+                 max_wait_ms: float = 5.0, queue_depth: int | None = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.executor = executor
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self.queue: Queue[Request] = Queue(
+            maxsize=queue_depth if queue_depth is not None else executor.pool)
+        self._issued: Queue[tuple[Request, Any]] = Queue()
+        self._running = False
+        self._batcher: threading.Thread | None = None
+        self._retirer: threading.Thread | None = None
+        self._done: list[Request] = []
+        self._batch_sizes: list[int] = []
+        self._lock = threading.Lock()
+
+    # -- lifecycle ----------------------------------------------------------- #
+    def start(self) -> "RequestQueueServer":
+        self._running = True
+        self._batcher = threading.Thread(target=self._batch_loop, daemon=True)
+        self._retirer = threading.Thread(target=self._retire_loop, daemon=True)
+        self._batcher.start()
+        self._retirer.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain the queue, serve everything submitted, then stop."""
+        self._running = False
+        if self._batcher is not None:
+            self._batcher.join()
+        self._issued.put(None)          # retirer sentinel
+        if self._retirer is not None:
+            self._retirer.join()
+
+    def __enter__(self) -> "RequestQueueServer":
+        return self.start()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()
+
+    # -- client API ---------------------------------------------------------- #
+    def submit(self, *args: Any) -> Request:
+        """Enqueue one request; blocks when the queue is full (backpressure)."""
+        r = Request(args=args, t_submit=time.perf_counter())
+        self.queue.put(r)
+        return r
+
+    def stats(self) -> dict:
+        """Per-request latency summary + executor throughput counters."""
+        with self._lock:         # one snapshot: latencies, sizes, span agree
+            lat = [r.latency_ms for r in self._done if r.latency_ms is not None]
+            queue_ms = [r.queue_ms for r in self._done
+                        if r.queue_ms is not None]
+            sizes = list(self._batch_sizes)
+            done = list(self._done)
+        span_s = 0.0
+        if done:
+            span_s = (max(r.t_done for r in done)
+                      - min(r.t_submit for r in done))
+        return {
+            "requests_served": len(lat),
+            "batches": len(sizes),
+            "mean_batch_size": float(np.mean(sizes)) if sizes else 0.0,
+            "throughput_rps": (len(lat) / span_s) if span_s > 0 else 0.0,
+            "latency_ms": {
+                "mean": float(np.mean(lat)) if lat else 0.0,
+                "p50": _percentile(lat, 50),
+                "p95": _percentile(lat, 95),
+                "max": max(lat) if lat else 0.0,
+            },
+            "queue_ms_mean": float(np.mean(queue_ms)) if queue_ms else 0.0,
+            "executor": self.executor.stats().as_dict(),
+        }
+
+    # -- server threads ------------------------------------------------------ #
+    def _collect_batch(self) -> list[Request]:
+        try:
+            first = self.queue.get(timeout=0.02)
+        except Empty:
+            return []
+        batch = [first]
+        deadline = time.perf_counter() + self.max_wait_ms / 1e3
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self.queue.get(timeout=remaining))
+            except Empty:
+                break
+        return batch
+
+    def _batch_loop(self) -> None:
+        while self._running or not self.queue.empty():
+            batch = self._collect_batch()
+            if not batch:
+                continue
+            t_batch = time.perf_counter()
+            for r in batch:
+                r.t_batch = t_batch
+            try:
+                # eager async issue; blocks only on token-pool backpressure
+                handles = self.executor.submit_many([r.args for r in batch])
+            except BaseException as first_err:
+                # SubmitError carries handles for the prefix that WAS
+                # admitted — keep those (never double-issue device work)
+                # and retry only the remainder one-by-one so just the
+                # malformed request(s) fail
+                handles = list(getattr(first_err, "handles", []) or [])
+                good: list[Request] = batch[:len(handles)]
+                for r in batch[len(handles):]:
+                    try:
+                        handles.extend(self.executor.submit_many([r.args]))
+                        good.append(r)
+                    except BaseException as e:
+                        r.error = getattr(e, "__cause__", None) or e
+                        r.t_done = time.perf_counter()
+                        r._event.set()
+                batch = good
+                if not batch:
+                    continue
+            with self._lock:
+                self._batch_sizes.append(len(batch))
+            for r, h in zip(batch, handles):
+                self._issued.put((r, h))
+
+    def _retire_loop(self) -> None:
+        while True:
+            item = self._issued.get()
+            if item is None:
+                return
+            r, handle = item
+            try:
+                r.result = handle.result()
+            except BaseException as e:
+                r.error = e
+            r.t_done = time.perf_counter()
+            with self._lock:
+                self._done.append(r)
+            r._event.set()
+
+
+def serve_pipeline_demo(n_requests: int = 64, max_batch: int = 8,
+                        max_wait_ms: float = 4.0,
+                        size: tuple[int, int] = (64, 96)) -> dict:
+    """Smoke-servable demo: Harris pipeline behind the request queue."""
+    from repro.core import courier_offload
+    from repro.core.tracer import Library
+    from repro.models.harris import corner_harris_demo, make_harris_db
+
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    db = make_harris_db(with_hw=False)
+    lib = Library(db)
+    app = corner_harris_demo(lib)
+    H, W = size
+    frames = [jax.random.uniform(jax.random.PRNGKey(i), (H, W, 3)) * 255
+              for i in range(n_requests)]
+    off = courier_offload(app, frames[0], db=db, prefer_hw=False)
+    # pad_microbatches: ragged partial batches reuse the one compiled
+    # [max_batch, ...] executable instead of compiling per batch size
+    ex = off.pipeline.executor(microbatch=max_batch, pad_microbatches=True)
+    ex.warmup(frames[0])      # compile before latencies are measured
+
+    with RequestQueueServer(ex, max_batch=max_batch,
+                            max_wait_ms=max_wait_ms) as srv:
+        reqs = [srv.submit(f) for f in frames]
+        for r in reqs:
+            r.wait(timeout=120.0)
+    return srv.stats()
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["lm", "pipeline"], default="lm")
     ap.add_argument("--arch", choices=ARCH_IDS, default="gemma3-12b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=4.0)
     args = ap.parse_args()
+
+    if args.mode == "pipeline":
+        stats = serve_pipeline_demo(n_requests=args.requests,
+                                    max_batch=args.max_batch,
+                                    max_wait_ms=args.max_wait_ms)
+        lat = stats["latency_ms"]
+        print(f"[serve] pipeline mode: {stats['requests_served']} requests, "
+              f"{stats['batches']} batches "
+              f"(mean size {stats['mean_batch_size']:.1f})")
+        print(f"[serve] latency ms: mean={lat['mean']:.2f} "
+              f"p50={lat['p50']:.2f} p95={lat['p95']:.2f} max={lat['max']:.2f}")
+        print(f"[serve] executor: {stats['executor']}")
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -11,7 +11,12 @@
 * :class:`ElasticPlanner` — the Courier angle on elasticity: when the
   device count changes, *re-run the Pipeline Generator* to re-balance stage
   boundaries for the surviving resources (paper's balanced partition, new
-  resource count), instead of aborting the job.
+  resource count), instead of aborting the job.  With a module database it
+  also owns the serving-side executor: :meth:`ElasticPlanner.executor_for`
+  recompiles the stage functions and rebuilds the
+  :class:`~repro.core.executor.PipelineExecutor` *only* when the re-planned
+  stage boundaries actually change, so an elastic resize is a cheap no-op
+  when the balanced partition is unaffected.
 """
 from __future__ import annotations
 
@@ -52,10 +57,19 @@ class StragglerMonitor:
 # Elastic re-planning (Courier re-balance on resource change)
 # --------------------------------------------------------------------------- #
 class ElasticPlanner:
-    """Re-balance pipeline stage boundaries when the stage count changes."""
+    """Re-balance pipeline stage boundaries when the stage count changes.
 
-    def __init__(self, layer_ir: CourierIR):
+    ``db`` (optional) enables the executor path: the planner can then turn
+    a re-balanced plan into compiled stage functions and a running
+    :class:`~repro.core.executor.PipelineExecutor`, caching the current
+    executor keyed by its stage boundaries.
+    """
+
+    def __init__(self, layer_ir: CourierIR, db: Any = None):
         self.layer_ir = layer_ir
+        self.db = db
+        self._cached: tuple[tuple[int, ...], Any] | None = None
+        self.rebuilds = 0                 # executor recompiles (observability)
 
     def plan(self, n_stages: int) -> PipelinePlan:
         return partition_optimal(self.layer_ir, max_stages=n_stages)
@@ -67,6 +81,38 @@ class ElasticPlanner:
             bounds.append(i)
             i += len(s.node_names)
         return bounds
+
+    def executor_for(self, n_stages: int, *, max_in_flight: int | None = None,
+                     microbatch: int = 1, jit: bool = True) -> tuple[Any, bool]:
+        """(executor, rebuilt) for a resource count of ``n_stages``.
+
+        Re-partitions the IR for the new stage count; when the resulting
+        stage boundaries (or the requested executor config) differ from the
+        cached executor's, stage functions are recompiled and a fresh
+        executor is returned (``rebuilt=True``).  An unchanged partition
+        with the same config reuses the cached executor (``rebuilt=False``)
+        — in-flight work and warm compilations survive the resize.
+        """
+        if self.db is None:
+            raise ValueError("ElasticPlanner needs a ModuleDatabase to build "
+                             "executors; pass db= at construction")
+        from repro.core.executor import PipelineExecutor
+        from repro.core.pipeline import assign_placements, make_stage_fns
+
+        plan = self.plan(n_stages)
+        key = (tuple(len(s.node_names) for s in plan.stages),
+               max_in_flight, microbatch, jit)
+        if self._cached is not None and self._cached[0] == key:
+            return self._cached[1], False
+        assign_placements(self.layer_ir, self.db)
+        fns = make_stage_fns(self.layer_ir, self.db, plan, jit=jit)
+        ex = PipelineExecutor(fns, self.layer_ir.graph_inputs,
+                              self.layer_ir.graph_outputs,
+                              max_in_flight=max_in_flight,
+                              microbatch=microbatch)
+        self._cached = (key, ex)
+        self.rebuilds += 1
+        return ex, True
 
 
 # --------------------------------------------------------------------------- #

@@ -20,6 +20,7 @@ KEY = jax.random.PRNGKey(7)
     (2, 128, 4, 32, 384),         # cross-attn style T != M
 ])
 @pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_attention_sweep(B, T, H, hd, M, causal, window, dtype):
     if not causal and T != M:

@@ -22,6 +22,7 @@ def _inputs(c):
     return ids, kw
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_arch_smoke(arch):
     c = get_config(arch).reduced()
