@@ -1,0 +1,23 @@
+# Courier-TPU — common entry points.
+# PYTHONPATH covers src/ (the package) and . (the benchmarks package).
+PY      ?= python
+PYPATH  := src:.
+
+.PHONY: test test-fast bench bench-smoke clean-autotune
+
+test:            ## full tier-1 suite (incl. slow markers)
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
+
+test-fast:       ## fast split (excludes @slow: subprocess/multi-device tests)
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q -m "not slow"
+
+bench:           ## all paper tables + fusion benchmark; writes BENCH_pipeline.json
+	PYTHONPATH=$(PYPATH) $(PY) benchmarks/run.py
+
+bench-smoke:     ## single CI entry point: fast tests + 2-token pipeline benchmark
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q -m "not slow"
+	PYTHONPATH=$(PYPATH) $(PY) benchmarks/run.py --smoke
+
+clean-autotune:  ## drop the persistent block-size autotune cache
+	PYTHONPATH=$(PYPATH) $(PY) -c "from repro.kernels.autotune import \
+	default_cache; default_cache.clear(); print('cleared', default_cache.path)"

@@ -1,0 +1,212 @@
+"""Fusion benchmark — fused Pallas mega-kernels vs unfused chains.
+
+Three views, all feeding ``BENCH_pipeline.json``:
+
+1. *Kernel*: the single-pass fused Harris mega-kernel (cvtColor →
+   cornerHarris → convertScaleAbs in one ``pallas_call``) against the
+   unfused 3-kernel chain, wall-clocked (interpret-mode kernels on CPU
+   containers; native on TPU).
+2. *Roofline*: the cost model's side of the story — HBM bytes for the
+   unfused chain vs the fused kernel (intermediates VMEM-resident), i.e.
+   the traffic reduction that makes fusion win on TPU where the paper's
+   FPGA synthesis report made it lose.
+3. *Pipeline*: tokens/s of the generated mixed pipeline with the fusion
+   compiler off vs on (cost-model-driven ``fuse=True``), plus the fused
+   rmsnorm+matmul epilogue micro-benchmark.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import courier_offload
+from repro.core.tracer import Library
+from repro.models.harris import (_c_csa, _c_cvt, _c_fused_mega, _c_harris,
+                                 corner_harris_demo, make_harris_db)
+
+SIZE = (64, 96)
+
+
+def _interleaved_best_ms(fns: dict, reps: int = 10) -> dict:
+    """min-of-reps wall ms per callable, reps interleaved across variants.
+
+    On a shared container the background load swings throughput by 2-4x
+    between seconds; measuring variant A's reps back-to-back before variant
+    B's makes the comparison meaningless.  Interleaving gives every variant
+    the same noise distribution and min-of-reps picks each one's clean run.
+    """
+    import time
+
+    for f in fns.values():                       # warmup/compile
+        jax.block_until_ready(f())
+    best = {k: float("inf") for k in fns}
+    for _ in range(reps):
+        for k, f in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(f())
+            best[k] = min(best[k], (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+# --------------------------------------------------------------------------- #
+# 1. kernel-level: fused mega-kernel vs 3-kernel chain
+# --------------------------------------------------------------------------- #
+def kernel_compare(size: tuple[int, int] = SIZE, reps: int = 10) -> dict:
+    from repro.kernels.harris import (convert_scale_abs, corner_harris,
+                                      cvt_color, harris_fused)
+
+    H, W = size
+    img = jax.random.uniform(jax.random.PRNGKey(0), (H, W, 3)) * 255
+
+    @jax.jit
+    def chain(img):
+        return convert_scale_abs(corner_harris(cvt_color(img)))
+
+    @jax.jit
+    def fused(img):
+        return harris_fused(img)
+
+    best = _interleaved_best_ms({"chain": lambda: chain(img),
+                                 "fused": lambda: fused(img)}, reps=reps)
+    return {"shape": [H, W], "chain_ms": round(best["chain"], 4),
+            "fused_ms": round(best["fused"], 4),
+            "speedup": round(best["chain"] / max(best["fused"], 1e-9), 3)}
+
+
+# --------------------------------------------------------------------------- #
+# 2. roofline: HBM traffic with/without VMEM-resident intermediates
+# --------------------------------------------------------------------------- #
+def roofline_report(size: tuple[int, int] = SIZE) -> dict:
+    H, W = size
+    shapes = [(H, W, 3)]
+    parts = [_c_cvt(shapes, None, None), _c_harris([(H, W)], None, None),
+             _c_csa([(H, W)], None, None)]
+    unfused_bytes = sum(p.bytes_rw for p in parts)
+    fused = _c_fused_mega(shapes, None, None)
+    return {
+        "shape": [H, W],
+        "hbm_bytes_unfused": int(unfused_bytes),
+        "hbm_bytes_fused": int(fused.bytes_rw),
+        "hbm_bytes_saved": int(unfused_bytes - fused.bytes_rw),
+        "traffic_reduction": round(unfused_bytes / max(fused.bytes_rw, 1), 3),
+        "est_unfused_ms": round(sum(p.time_ms() for p in parts), 6),
+        "est_fused_ms": round(fused.time_ms(), 6),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# 3. pipeline-level: fusion compiler off vs on (same hw modules)
+# --------------------------------------------------------------------------- #
+def pipeline_compare(n_frames: int = 8,
+                     size: tuple[int, int] = SIZE) -> dict:
+    H, W = size
+    frames = [jax.random.uniform(jax.random.PRNGKey(i), (H, W, 3)) * 255
+              for i in range(n_frames)]
+
+    def build(fuse: bool):
+        db = make_harris_db(with_hw=True)
+        app = corner_harris_demo(Library(db))
+        return courier_offload(app, frames[0], db=db, prefer_hw=True,
+                               fuse=fuse)
+
+    offs = {"unfused": build(False), "fused": build(True)}
+    execs, best = {}, {}
+    for label, off in offs.items():
+        execs[label] = off.pipeline.executor(max_in_flight=n_frames)
+        execs[label].warmup(frames[0])
+        best[label] = float("inf")
+    # interleave the reps so both variants sample the same background noise
+    # (shared-container throughput swings dominate back-to-back runs)
+    for _ in range(10):
+        for label, ex in execs.items():
+            ex.reset_stats()
+            ex.run(frames)
+            best[label] = min(best[label], ex.stats().wall_ms)
+    out = {}
+    for label, off in offs.items():
+        out[label] = {
+            "tokens_per_sec": round(n_frames / (best[label] / 1e3), 2),
+            "bottleneck_ms": round(off.pipeline.plan.bottleneck_ms, 6),
+            "n_stages": off.pipeline.plan.n_stages,
+            "compile_count": off.pipeline.compile_count(),
+            "fused_nodes": [n.fn_key for n in off.pipeline.ir.nodes
+                            if n.fused_from],
+        }
+    out["speedup_fused_vs_unfused"] = round(
+        out["fused"]["tokens_per_sec"]
+        / max(out["unfused"]["tokens_per_sec"], 1e-9), 3)
+    return out
+
+
+def rmsnorm_matmul_compare(N: int = 256, d: int = 512,
+                           dout: int = 512) -> dict:
+    from repro.kernels import ref
+    from repro.kernels.rmsnorm import rmsnorm, rmsnorm_matmul
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (N, d))
+    s = jax.random.normal(ks[1], (d,)) * 0.1
+    w = jax.random.normal(ks[2], (d, dout))
+
+    @jax.jit
+    def unfused(x, s, w):
+        return jnp.dot(rmsnorm(x, s).astype(jnp.float32), w)
+
+    @jax.jit
+    def fused(x, s, w):
+        return rmsnorm_matmul(x, s, w)
+
+    best = _interleaved_best_ms({"unfused": lambda: unfused(x, s, w),
+                                 "fused": lambda: fused(x, s, w)})
+    return {"shape": [N, d, dout], "unfused_ms": round(best["unfused"], 4),
+            "fused_ms": round(best["fused"], 4),
+            "speedup": round(best["unfused"] / max(best["fused"], 1e-9), 3)}
+
+
+_payload_cache: dict = {}
+
+
+def payload(smoke: bool = False) -> dict:
+    """The fusion half of ``BENCH_pipeline.json``.  Memoized per ``smoke``
+    flag so CSV emission and the JSON artifact share one measurement."""
+    if smoke not in _payload_cache:
+        n_frames = 2 if smoke else 8
+        _payload_cache[smoke] = {
+            "harris_kernel": kernel_compare(),
+            "roofline": roofline_report(),
+            "pipeline": pipeline_compare(n_frames=n_frames),
+            "rmsnorm_matmul": rmsnorm_matmul_compare(
+                *((64, 128, 128) if smoke else (256, 512, 512))),
+        }
+    return _payload_cache[smoke]
+
+
+def run() -> list[tuple[str, float, str]]:
+    p = payload()
+    rows = [
+        ("fusion.kernel.chain_ms", p["harris_kernel"]["chain_ms"],
+         "3 pallas_calls; gray/response bounce through HBM"),
+        ("fusion.kernel.fused_ms", p["harris_kernel"]["fused_ms"],
+         "one pallas_call; intermediates stay in VMEM scratch"),
+        ("fusion.kernel.speedup", p["harris_kernel"]["speedup"],
+         "fused mega-kernel vs unfused 3-kernel chain"),
+        ("fusion.roofline.traffic_reduction",
+         p["roofline"]["traffic_reduction"],
+         f"{p['roofline']['hbm_bytes_saved']} HBM bytes saved/frame"),
+        ("fusion.pipeline.unfused_tps",
+         p["pipeline"]["unfused"]["tokens_per_sec"],
+         f"{p['pipeline']['unfused']['n_stages']} stages"),
+        ("fusion.pipeline.fused_tps",
+         p["pipeline"]["fused"]["tokens_per_sec"],
+         f"fused nodes: {p['pipeline']['fused']['fused_nodes']}"),
+        ("fusion.pipeline.speedup", p["pipeline"]["speedup_fused_vs_unfused"],
+         "cost-model fusion on vs off, same Pallas modules"),
+        ("fusion.rmsnorm_matmul.speedup", p["rmsnorm_matmul"]["speedup"],
+         "fused epilogue vs rmsnorm-then-matmul"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -5,7 +5,16 @@ Prints ``name,value,derived`` CSV.  Tables map to the paper:
   table2 — per-module evaluation (HLS report → TPU roofline estimate)
   table3 — resource utilization (BRAM/DSP/LUT → VMEM/MXU budget)
   fig4   — traced function call graph incl. I/O data
+  fusion — fused mega-kernels vs unfused chains (beyond-paper)
   roofline — deliverable (g), from the dry-run artifacts when present
+
+Also writes ``BENCH_pipeline.json`` (machine-readable tokens/s +
+bottleneck ms incl. the fused path) so the perf trajectory is tracked
+across PRs.
+
+``--smoke``: the fast CI entry point — a 2-token pipeline benchmark plus
+the fusion smoke comparison only (pair with ``pytest -m "not slow"``, see
+``make bench-smoke``).
 """
 from __future__ import annotations
 
@@ -13,19 +22,50 @@ import sys
 import traceback
 
 
+def _emit(mod) -> None:
+    try:
+        for name, value, derived in mod.run():
+            print(f"{name},{value},{str(derived).replace(',', ';')}")
+    except Exception as e:
+        print(f"{mod.__name__}.ERROR,-1,{type(e).__name__}: "
+              f"{str(e)[:120]}".replace(",", ";"))
+        traceback.print_exc(file=sys.stderr)
+
+
 def main() -> None:
-    from benchmarks import (fig4_callgraph, roofline, table1_pipeline,
+    from benchmarks import (fig4_callgraph, fusion, roofline, table1_pipeline,
                             table2_modules, table3_resources)
+
+    smoke = "--smoke" in sys.argv[1:]
     print("name,value,derived")
-    for mod in (table1_pipeline, table2_modules, table3_resources,
-                fig4_callgraph, roofline):
+    if smoke:
+        # 2-token pipeline benchmark + fusion comparison, small frames;
+        # one measurement feeds both the CSV rows and BENCH_pipeline.json
+        # (measured_numbers / fusion.payload are memoized)
         try:
-            for name, value, derived in mod.run():
-                print(f"{name},{value},{str(derived).replace(',', ';')}")
+            m = table1_pipeline.measured_numbers(n_frames=2, size=(64, 96))
+            for key in ("sequential_ms", "wavefront_ms", "async_ms"):
+                print(f"smoke.{key},{round(m[key], 3)},2-token 64x96 stream")
+            f = fusion.payload(smoke=True)["harris_kernel"]
+            print(f"smoke.fusion.speedup,{f['speedup']},"
+                  f"fused {f['fused_ms']} ms vs chain {f['chain_ms']} ms")
+            path = table1_pipeline.write_bench_json(smoke=True)
+            print(f"smoke.bench_json,0,{path}")
         except Exception as e:
-            print(f"{mod.__name__}.ERROR,-1,{type(e).__name__}: "
+            print(f"smoke.ERROR,-1,{type(e).__name__}: "
                   f"{str(e)[:120]}".replace(",", ";"))
             traceback.print_exc(file=sys.stderr)
+            sys.exit(1)
+        return
+    for mod in (table1_pipeline, table2_modules, table3_resources,
+                fig4_callgraph, fusion, roofline):
+        _emit(mod)
+    try:
+        path = table1_pipeline.write_bench_json()
+        print(f"bench_json,0,{path}")
+    except Exception as e:
+        print(f"bench_json.ERROR,-1,{type(e).__name__}: "
+              f"{str(e)[:120]}".replace(",", ";"))
 
 
 if __name__ == "__main__":

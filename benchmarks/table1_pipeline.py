@@ -13,6 +13,8 @@ Three parts:
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -49,6 +51,48 @@ def paper_replay() -> list[tuple[str, float, str]]:
 def measured_run(n_frames: int = 12, hw: bool = True,
                  size: tuple[int, int] = (270, 480)) -> list[tuple[str, float, str]]:
     """Trace + offload + run the real app; wall-clock seq vs pipelined."""
+    m = measured_numbers(n_frames=n_frames, hw=hw, size=size)
+    H, W = size
+    return [
+        ("table1.this_host.sequential_ms_per_frame", m["sequential_ms"],
+         f"{H}x{W}, {n_frames} frames, unmodified eager app"),
+        ("table1.this_host.staged_nopipe_ms_per_frame", m["staged_ms"],
+         "compiled stages, no token overlap"),
+        ("table1.this_host.pipelined_ms_per_frame", m["wavefront_ms"],
+         f"{m['n_stages']} stages, synchronous wavefront run()"),
+        ("table1.this_host.async_ms_per_frame", m["async_ms"],
+         f"PipelineExecutor, mean occupancy {m['occupancy']:.1f} tokens"),
+        ("table1.this_host.async_microbatch_ms_per_frame", m["microbatch_ms"],
+         f"PipelineExecutor, microbatch={m['microbatch']}"),
+        ("table1.this_host.async_throughput_fps", m["async_tps"],
+         "async executor frames/s"),
+        ("table1.this_host.speedup_total",
+         round(m["sequential_ms"] / max(m["wavefront_ms"], 1e-9), 3),
+         "vs unmodified app (paper's headline comparison)"),
+        ("table1.this_host.speedup_pipelining",
+         round(m["staged_ms"] / max(m["wavefront_ms"], 1e-9), 3),
+         "token overlap only; 1-core container limits true parallelism"),
+        ("table1.this_host.speedup_async_vs_wavefront",
+         round(m["wavefront_ms"] / max(m["async_ms"], 1e-9), 3),
+         "async executor vs synchronous wavefront run()"),
+        ("table1.this_host.speedup_async_vs_sequential",
+         round(m["sequential_ms"] / max(m["async_ms"], 1e-9), 3),
+         "async executor vs unmodified sequential app"),
+    ]
+
+
+_numbers_cache: dict = {}
+
+
+def measured_numbers(n_frames: int = 12, hw: bool = True,
+                     size: tuple[int, int] = (270, 480)) -> dict:
+    """Machine-readable core of the Table-1 measurement (per-frame ms and
+    tokens/s for every execution mode); consumed by ``bench_payload``.
+    Memoized per (n_frames, hw, size) so the CSV rows and the JSON artifact
+    share one measurement instead of running the benchmark twice."""
+    cache_key = (n_frames, hw, tuple(size))
+    if cache_key in _numbers_cache:
+        return _numbers_cache[cache_key]
     db = make_harris_db(with_hw=hw)
     lib = Library(db)
     app = corner_harris_demo(lib)
@@ -101,31 +145,68 @@ def measured_run(n_frames: int = 12, hw: bool = True,
     jax.block_until_ready(exb.run(frames[:mb]))
     t_batched = best_ms(lambda: exb.run(frames))
 
-    return [
-        ("table1.this_host.sequential_ms_per_frame", t_seq / n_frames,
-         f"{H}x{W}, {n_frames} frames, unmodified eager app"),
-        ("table1.this_host.staged_nopipe_ms_per_frame", t_seqjit / n_frames,
-         "compiled stages, no token overlap"),
-        ("table1.this_host.pipelined_ms_per_frame", t_pipe / n_frames,
-         f"{off.pipeline.plan.n_stages} stages, synchronous wavefront run()"),
-        ("table1.this_host.async_ms_per_frame", t_async / n_frames,
-         f"PipelineExecutor, mean occupancy {occ:.1f} tokens"),
-        ("table1.this_host.async_microbatch_ms_per_frame", t_batched / n_frames,
-         f"PipelineExecutor, microbatch={mb}"),
-        ("table1.this_host.async_throughput_fps",
-         round(n_frames / max(t_async / 1e3, 1e-9), 2),
-         "async executor frames/s"),
-        ("table1.this_host.speedup_total", round(t_seq / max(t_pipe, 1e-9), 3),
-         "vs unmodified app (paper's headline comparison)"),
-        ("table1.this_host.speedup_pipelining", round(t_seqjit / max(t_pipe, 1e-9), 3),
-         "token overlap only; 1-core container limits true parallelism"),
-        ("table1.this_host.speedup_async_vs_wavefront",
-         round(t_pipe / max(t_async, 1e-9), 3),
-         "async executor vs synchronous wavefront run()"),
-        ("table1.this_host.speedup_async_vs_sequential",
-         round(t_seq / max(t_async, 1e-9), 3),
-         "async executor vs unmodified sequential app"),
-    ]
+    _numbers_cache[cache_key] = {
+        "shape": [H, W], "n_frames": n_frames,
+        "sequential_ms": t_seq / n_frames,
+        "staged_ms": t_seqjit / n_frames,
+        "wavefront_ms": t_pipe / n_frames,
+        "async_ms": t_async / n_frames,
+        "microbatch_ms": t_batched / n_frames,
+        "microbatch": mb,
+        "occupancy": occ,
+        "n_stages": off.pipeline.plan.n_stages,
+        "bottleneck_ms": off.pipeline.plan.bottleneck_ms,
+        "sequential_tps": round(n_frames / max(t_seq / 1e3, 1e-9), 2),
+        "wavefront_tps": round(n_frames / max(t_pipe / 1e3, 1e-9), 2),
+        "async_tps": round(n_frames / max(t_async / 1e3, 1e-9), 2),
+        "compile_count": off.pipeline.compile_count(),
+    }
+    return _numbers_cache[cache_key]
+
+
+# --------------------------------------------------------------------------- #
+# Machine-readable benchmark artifact (BENCH_pipeline.json)
+# --------------------------------------------------------------------------- #
+def bench_payload(smoke: bool = False) -> dict:
+    """sequential / wavefront / async / fused tokens-per-sec + bottleneck ms,
+    plus the fusion benchmark — the perf trajectory tracked across PRs."""
+    from benchmarks import fusion
+
+    n_frames = 2 if smoke else 12
+    size = (64, 96) if smoke else (270, 480)
+    # fusion comparison first: it is the finest-grained measurement and the
+    # most sensitive to allocator/background state left by the big-frame run
+    fus = fusion.payload(smoke=smoke)
+    m = measured_numbers(n_frames=n_frames, hw=True, size=size)
+    return {
+        "bench": "table1_pipeline", "smoke": bool(smoke),
+        "shape": m["shape"], "n_frames": m["n_frames"],
+        "tokens_per_sec": {
+            "sequential": m["sequential_tps"],
+            "wavefront": m["wavefront_tps"],
+            "async": m["async_tps"],
+            "fused": fus["pipeline"]["fused"]["tokens_per_sec"],
+        },
+        "bottleneck_ms": {
+            "pipeline": round(m["bottleneck_ms"], 6),
+            "fused_pipeline": fus["pipeline"]["fused"]["bottleneck_ms"],
+            "unfused_pipeline": fus["pipeline"]["unfused"]["bottleneck_ms"],
+        },
+        "per_frame_ms": {k: round(m[k], 4) for k in
+                         ("sequential_ms", "staged_ms", "wavefront_ms",
+                          "async_ms", "microbatch_ms")},
+        "compile_count_steady": m["compile_count"],
+        "fusion": fus,
+    }
+
+
+def write_bench_json(path: str | None = None, smoke: bool = False) -> str:
+    path = path or os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_pipeline.json")
+    with open(path, "w") as f:
+        json.dump(bench_payload(smoke=smoke), f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def serving_run(n_requests: int = 24, max_batch: int = 4) -> list[tuple[str, float, str]]:
@@ -155,3 +236,4 @@ def run() -> list[tuple[str, float, str]]:
 if __name__ == "__main__":
     for r in run():
         print(",".join(str(x) for x in r))
+    print("wrote", write_bench_json())

@@ -64,10 +64,97 @@ class NodeCost:
     def __add__(self, other: "NodeCost") -> "NodeCost":
         m = None
         if self.measured_ms is not None or other.measured_ms is not None:
-            m = (self.measured_ms or 0.0) + (other.measured_ms or 0.0)
+            # mixed measured+estimated sum: the operand without a profile
+            # contributes its roofline estimate, not 0 — otherwise a stage
+            # holding one profiled and one estimated node underreports.
+            m = self.time_ms() + other.time_ms()
         return NodeCost(self.flops + other.flops,
                         self.bytes_rw + other.bytes_rw,
                         self.coll_bytes + other.coll_bytes, m)
+
+
+# --------------------------------------------------------------------------- #
+# Fusion model — VMEM-resident intermediates (the TPU dataflow-fusion analog)
+# --------------------------------------------------------------------------- #
+@dataclass
+class FusionEstimate:
+    """Predicted economics of fusing a run of adjacent nodes into one kernel.
+
+    On the paper's FPGA the fused cvtColor+cornerHarris module was *slower*
+    than its pipelined parts, so Courier rejected it.  On TPU the economics
+    usually invert: a fused kernel keeps the intermediates resident in VMEM,
+    so their HBM write+readback traffic disappears — but only while the
+    fused working set actually fits VMEM.  This record carries both sides of
+    that decision so callers (``fuse_adjacent_hw``) can accept wins and
+    reject spills.
+    """
+
+    cost: NodeCost                  # the fused kernel's roofline record
+    hbm_bytes_saved: float          # intermediate write+read traffic removed
+    vmem_required: int              # fused working-set bytes (tiles + halos)
+    vmem_bytes: int                 # capacity it was checked against
+    unfused_ms: float               # sum of the parts' times (seq. latency)
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_required <= self.vmem_bytes
+
+    @property
+    def fused_ms(self) -> float:
+        """Predicted fused-kernel time; +inf when the working set spills.
+
+        Returning +inf (rather than a degraded estimate) makes a spilling
+        fusion lose against *any* acceptance threshold, which is exactly the
+        contract ``fuse_adjacent_hw`` needs.
+        """
+        if not self.fits_vmem:
+            return float("inf")
+        return self.cost.time_ms()
+
+    @property
+    def wins(self) -> bool:
+        return self.fits_vmem and self.fused_ms < self.unfused_ms
+
+    def describe(self) -> str:
+        return (f"FusionEstimate(fused={self.fused_ms:.4f} ms, "
+                f"unfused={self.unfused_ms:.4f} ms, "
+                f"hbm_saved={self.hbm_bytes_saved / 1e6:.2f} MB, "
+                f"vmem={self.vmem_required / 1e6:.2f}/"
+                f"{self.vmem_bytes / 1e6:.0f} MB, "
+                f"{'fits' if self.fits_vmem else 'SPILLS'})")
+
+
+def fused_cost(parts: "list[NodeCost]", intermediate_bytes: float, *,
+               vmem_required: int = 0,
+               vmem_bytes: int = VMEM_BYTES) -> FusionEstimate:
+    """Model a fused kernel over ``parts`` with VMEM-resident intermediates.
+
+    ``intermediate_bytes`` is the total size of the values flowing *between*
+    the fused parts.  Unfused, each such value costs one HBM write (by its
+    producer) and one HBM read (by its consumer); fused, it never leaves
+    VMEM, so ``2 * intermediate_bytes`` of traffic vanishes.  FLOPs are
+    conserved — fusion only moves data, it doesn't remove arithmetic.
+
+    ``vmem_required`` is the fused kernel's resident working set (input +
+    intermediate + output tiles incl. halos).  When it exceeds
+    ``vmem_bytes`` the fusion would spill and the estimate reports
+    ``fused_ms = inf`` so callers reject it.
+
+    Parts' ``measured_ms`` are deliberately ignored for the *fused* record:
+    the fused kernel is new code, so only the roofline speaks for it; the
+    measured times still make up ``unfused_ms`` (the side we compare with).
+    """
+    if not parts:
+        raise ValueError("fused_cost needs at least one part")
+    flops = sum(p.flops for p in parts)
+    byts = sum(p.bytes_rw for p in parts)
+    coll = sum(p.coll_bytes for p in parts)
+    saved = min(2.0 * intermediate_bytes, byts)     # can't save more than all
+    cost = NodeCost(flops=flops, bytes_rw=byts - saved, coll_bytes=coll)
+    unfused_ms = sum(p.time_ms() for p in parts)
+    return FusionEstimate(cost=cost, hbm_bytes_saved=saved,
+                          vmem_required=int(vmem_required),
+                          vmem_bytes=int(vmem_bytes), unfused_ms=unfused_ms)
 
 
 # --------------------------------------------------------------------------- #

@@ -78,6 +78,72 @@ class ModuleDatabase:
         if applicable is not None:
             self.entries[name].applicable = applicable
 
+    @staticmethod
+    def fused_key(parts: "tuple[str, ...] | list[str]") -> str:
+        """The database key a fused run of ``parts`` resolves under."""
+        return "+".join(parts)
+
+    def register_fused(self, parts: "tuple[str, ...] | list[str]",
+                       accelerated: Callable,
+                       applicable: Callable[..., bool] | None = None,
+                       cost_hw: Callable[..., NodeCost] | None = None,
+                       tags: tuple[str, ...] = ()) -> ModuleEntry:
+        """Register a dedicated fused hw module for a run of functions.
+
+        The entry lives under the joined key (``"a+b+c"``) — the same key
+        :func:`repro.core.partition.fuse_adjacent_hw` gives a fused node —
+        so the pipeline backend resolves the *single-pass mega-kernel*
+        instead of composing the parts' individual kernels.  The software
+        fallback composes the parts' registered software impls, keeping the
+        Off-load Switcher's "original behavior always available" guarantee.
+        Every part must already be registered.
+        """
+        keys = list(parts)
+        if len(keys) < 2:
+            raise ValueError("a fused module needs >= 2 parts")
+        missing = [k for k in keys if k not in self.entries]
+        if missing:
+            raise KeyError(f"register software impls first for {missing!r}")
+        part_sw = [self.entries[k].software for k in keys]
+
+        def _arity(fn: Callable) -> int:
+            """Required positional inputs of a part's software impl."""
+            import inspect
+            try:
+                sig = inspect.signature(fn)
+            except (TypeError, ValueError):
+                return 1
+            n = 0
+            for p in sig.parameters.values():
+                if (p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+                        and p.default is p.empty):
+                    n += 1
+            return max(n, 1)
+
+        arities = [_arity(f) for f in part_sw]
+
+        def composed_software(*args: Any, **kwargs: Any):
+            # args follow the fused node's calling convention: part 0's
+            # inputs first, then each later part's *side operands* in part
+            # order (its first input is the carried previous output) — so a
+            # fused rmsnorm+matmul fallback routes (x, scale, w) correctly.
+            queue = list(args)
+            take = arities[0]
+            out = part_sw[0](*queue[:take])
+            queue = queue[take:]
+            for f, ar in zip(part_sw[1:], arities[1:]):
+                carry = list(out) if isinstance(out, (tuple, list)) else [out]
+                extra = max(ar - len(carry), 0)
+                out = f(*carry, *queue[:extra])
+                queue = queue[extra:]
+            return out
+
+        e = ModuleEntry(name=self.fused_key(keys), software=composed_software,
+                        accelerated=accelerated, applicable=applicable,
+                        cost_hw=cost_hw, tags=tags + ("fused",))
+        self.entries[e.name] = e
+        return e
+
     # -- lookup (paper: "searches ... by functions name") --------------------- #
     def lookup(self, name: str) -> ModuleEntry | None:
         return self.entries.get(name)

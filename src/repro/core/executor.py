@@ -174,17 +174,31 @@ class PipelineExecutor:
         Max tokens stacked into one group when their shapes/dtypes agree
         (1 disables batching).  Groups never exceed the pool size.
     pad_microbatches:
-        When True, ragged groups (size < ``microbatch``) are padded to the
-        full micro-batch size by repeating the last token, so the vmapped
-        stage executables compile for exactly one leading-axis size —
-        serving loops use this to keep partial batches off the compile
-        path.  Padding rows are dropped at retirement.
+        When True, ragged groups (size < ``microbatch``) are padded by
+        repeating the last token, so the vmapped stage executables compile
+        for a closed set of leading-axis sizes — serving loops use this to
+        keep partial batches off the compile path.  Padding rows are
+        dropped at retirement.
+    buckets:
+        With ``pad_microbatches``, the closed set of group sizes to pad up
+        to (e.g. ``(1, 2, 4, 8)``).  A ragged group is padded to the
+        smallest bucket that fits instead of all the way to ``microbatch``,
+        so steady-state serving compiles one executable per bucket and pads
+        far fewer wasted rows.  ``None`` keeps the pad-to-max behavior.
+        Bucket sizes above ``microbatch`` are ignored; ``microbatch``
+        itself is always an implicit final bucket.
+    batched_fns:
+        Pre-built ``jit(vmap(stage))`` list to *share* across executors
+        (see ``BuiltPipeline.batched_stage_fns``).  When ``None`` the
+        executor builds its own lazily.
     """
 
     def __init__(self, stage_fns: Sequence[Callable],
                  graph_inputs: Sequence[str], graph_outputs: Sequence[str],
                  *, max_in_flight: int | None = None, microbatch: int = 1,
-                 pad_microbatches: bool = False):
+                 pad_microbatches: bool = False,
+                 buckets: Sequence[int] | None = None,
+                 batched_fns: Sequence[Callable] | None = None):
         if max_in_flight is not None and max_in_flight < 1:
             raise ValueError(
                 f"max_in_flight must be >= 1 (got {max_in_flight}); "
@@ -198,7 +212,14 @@ class PipelineExecutor:
             else len(self.stage_fns) + 1
         self.microbatch = min(microbatch, self.pool)
         self.pad_microbatches = pad_microbatches and self.microbatch > 1
-        self._batched_fns: list[Callable] | None = None   # lazy vmap+jit
+        if buckets is not None:
+            bs = sorted({int(b) for b in buckets
+                         if 1 <= int(b) <= self.microbatch})
+            self.buckets: tuple[int, ...] | None = tuple(bs) or None
+        else:
+            self.buckets = None
+        self._batched_fns: list[Callable] | None = (
+            list(batched_fns) if batched_fns is not None else None)
         self._inflight: deque[_Group] = deque()
         self._occupancy = 0               # live (non-retired) tokens
         self._lock = threading.RLock()
@@ -209,12 +230,21 @@ class PipelineExecutor:
     @classmethod
     def from_pipeline(cls, pipe, *, max_in_flight: int | None = None,
                       microbatch: int = 1,
-                      pad_microbatches: bool = False) -> "PipelineExecutor":
-        """Build from a :class:`repro.core.pipeline.BuiltPipeline`."""
+                      pad_microbatches: bool = False,
+                      buckets: Sequence[int] | None = None,
+                      ) -> "PipelineExecutor":
+        """Build from a :class:`repro.core.pipeline.BuiltPipeline`.
+
+        The vmapped stage executables are hoisted onto (and shared via) the
+        pipeline, so building a new executor over the same pipeline — pool
+        resizes, serving re-plans — never recompiles a stage.
+        """
         mif = max_in_flight if max_in_flight is not None else pipe.max_in_flight
+        batched = pipe.batched_stage_fns() if microbatch > 1 else None
         return cls(pipe.stage_fns, pipe.graph_inputs, pipe.graph_outputs,
                    max_in_flight=mif, microbatch=microbatch,
-                   pad_microbatches=pad_microbatches)
+                   pad_microbatches=pad_microbatches, buckets=buckets,
+                   batched_fns=batched)
 
     # -- public API ---------------------------------------------------------- #
     def submit(self, *args: Any) -> PendingToken:
@@ -268,13 +298,33 @@ class PipelineExecutor:
 
     def warmup(self, *args: Any) -> None:
         """Compile the per-token and (if batching) vmapped stage
-        executables for one example token, blocking until ready."""
+        executables for one example token, blocking until ready.  With
+        bucketed padding every bucket size is warmed, so steady-state
+        serving never compiles for a ragged group again."""
         self.submit(*args).result()
         if self.microbatch > 1:
-            n = self.microbatch
-            for h in self.submit_many([args] * n):
-                h.result()
+            sizes = set(self.buckets or ()) | {self.microbatch}
+            for n in sorted(sizes):
+                if n <= 1:
+                    continue
+                for h in self.submit_many([args] * n):
+                    h.result()
         self.reset_stats()
+
+    def compile_count(self) -> int:
+        """Executables compiled across per-token and vmapped stage fns.
+
+        Constant across identical-shape token waves after :meth:`warmup` —
+        the zero-recompile steady-state invariant the serving layer asserts.
+        """
+        total = sum(getattr(f, "compiles", 0) for f in self.stage_fns)
+        if self._batched_fns is not None:
+            for f in self._batched_fns:
+                try:
+                    total += f._cache_size()
+                except AttributeError:
+                    pass
+        return total
 
     def stats(self) -> ExecutorStats:
         return self._stats
@@ -323,15 +373,28 @@ class PipelineExecutor:
         if size == 1:
             return self.stage_fns
         if self._batched_fns is None:
-            # vmap over the env dict (a pytree of per-token arrays); jit so
-            # repeated group sizes reuse the compiled executable.
-            self._batched_fns = [jax.jit(jax.vmap(f)) for f in self.stage_fns]
+            # vmap over the env dict (a pytree of per-token arrays) — over
+            # the *raw* stage body when the stage is a StageFn, so one
+            # jit(vmap(...)) owns the executable cache; jit so repeated
+            # group sizes reuse the compiled executable.
+            self._batched_fns = [jax.jit(jax.vmap(getattr(f, "raw", f)))
+                                 for f in self.stage_fns]
         return self._batched_fns
+
+    def _pad_for(self, size: int) -> int:
+        """Padding rows for a ragged group: to the smallest bucket that
+        fits (bucketed mode) or all the way to ``microbatch``."""
+        if not self.pad_microbatches or size >= self.microbatch:
+            return 0
+        if self.buckets:
+            for b in self.buckets:
+                if b >= size:
+                    return b - size
+        return self.microbatch - size
 
     def _admit(self, group_toks: list[tuple]) -> list[PendingToken]:
         size = len(group_toks)
-        pad = (self.microbatch - size) if (self.pad_microbatches
-                                           and size < self.microbatch) else 0
+        pad = self._pad_for(size)
         stacked = size > 1 or pad > 0
         if stacked:
             # repeat the last token into the padding rows so every group

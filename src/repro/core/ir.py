@@ -79,6 +79,18 @@ class Node:
     # lets the backend re-check shape-gated hw applicability per part when it
     # resolves the fused node's implementations (empty for unfused nodes).
     fused_input_shapes: list[list[tuple[int, ...]]] = field(default_factory=list)
+    # per-part static call params recorded at fusion time (one dict per fused
+    # part), so the composed fallback impl re-binds each part's own params
+    # instead of dropping them; ``params`` on a fused node holds the merged
+    # view for a dedicated fused hw module.
+    fused_params: list[dict[str, Any]] = field(default_factory=list)
+    # per-part dataflow routing recorded at fusion time: each part's input /
+    # output value names.  A fused node's own ``inputs`` are the run's
+    # *external* inputs (anything not produced inside the run — e.g. the
+    # weight operand of a fused rmsnorm+matmul); the routing lists let the
+    # backend feed every part exactly the values it consumed pre-fusion.
+    fused_part_inputs: list[list[str]] = field(default_factory=list)
+    fused_part_outputs: list[list[str]] = field(default_factory=list)
 
 
 # --------------------------------------------------------------------------- #

@@ -27,12 +27,14 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
+from .costmodel import VMEM_BYTES, FusionEstimate, NodeCost, fused_cost
 from .database import ModuleDatabase
 from .ir import CourierIR, Node
 
 __all__ = [
     "StagePlan", "PipelinePlan",
     "partition_paper", "partition_optimal", "fuse_adjacent_hw",
+    "fused_working_set_bytes", "make_model_fused_cost",
 ]
 
 
@@ -214,23 +216,96 @@ def partition_optimal(ir: CourierIR, max_stages: int | None = None,
 
 
 # --------------------------------------------------------------------------- #
-# Fusion pass — #pragma HLS dataflow analog
+# Fusion pass — #pragma HLS dataflow analog, now cost-model driven
 # --------------------------------------------------------------------------- #
+def fused_working_set_bytes(ir: CourierIR, run: Sequence[Node], *,
+                            row_block: int = 8, halo_rows: int = 4,
+                            itemsize: int = 4) -> int:
+    """Resident VMEM bytes a row-block fused kernel needs for ``run``.
+
+    A fused stencil/elementwise kernel keeps one row-block tile of every
+    value the run touches (inputs, intermediates, outputs) resident at once.
+    For a value shaped ``(rows, ...)`` the tile is ``min(rows, row_block +
+    halo_rows)`` rows of ``prod(shape[1:])`` elements; rank-0/1 values count
+    whole (they are broadcast operands like norm scales).  ``halo_rows``
+    over-approximates stencil halos so the check errs toward rejecting.
+    """
+    import numpy as np
+
+    seen: set[str] = set()
+    for n in run:
+        seen.update(n.inputs)
+        seen.update(n.outputs)
+    total = 0
+    for vn in seen:
+        v = ir.values[vn]
+        if len(v.shape) >= 2:
+            rows = min(v.shape[0], row_block + halo_rows)
+            row_el = int(np.prod(v.shape[1:], dtype=np.int64))
+            total += rows * row_el * itemsize
+        else:
+            total += max(v.nbytes, itemsize)
+    return total
+
+
+def make_model_fused_cost(ir: CourierIR, *, vmem_bytes: int = VMEM_BYTES,
+                          row_block: int = 8,
+                          ) -> Callable[[list[Node]], FusionEstimate]:
+    """Build the cost-model fusion estimator for ``fuse_adjacent_hw``.
+
+    Returns a ``run -> FusionEstimate`` callable: the fused kernel's roofline
+    with the intermediates' HBM write+read traffic removed, gated by the
+    VMEM working-set check (a spilling fusion reports ``fused_ms = inf`` and
+    is therefore always rejected).  Nodes must carry ``flops``/``bytes_rw``
+    annotations (from ``CostModel.annotate`` or the database's ``cost_hw``
+    providers); a run containing an unannotated node is conservatively
+    unfusable — exactly the paper's stance when the synthesis report is
+    missing.
+    """
+    def estimate(run: list[Node]) -> FusionEstimate | float:
+        parts = []
+        for n in run:
+            if n.flops is None or n.bytes_rw is None:
+                return float("inf")        # no model → don't gamble on fusion
+            parts.append(NodeCost(flops=n.flops, bytes_rw=n.bytes_rw,
+                                  measured_ms=n.time_ms))
+        inter = sum(ir.values[o].nbytes
+                    for n in run[:-1] for o in n.outputs)
+        ws = fused_working_set_bytes(ir, run, row_block=row_block)
+        return fused_cost(parts, inter, vmem_required=ws,
+                          vmem_bytes=vmem_bytes)
+    return estimate
+
+
 def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
-                     fused_cost_ms: Callable[[list[Node]], float] | None = None,
-                     accept_threshold: float = 1.0) -> CourierIR:
+                     fused_cost_ms: Callable[[list[Node]], float]
+                     | str | None = None,
+                     accept_threshold: float = 1.0,
+                     vmem_bytes: int = VMEM_BYTES) -> CourierIR:
     """Merge maximal runs of adjacent DB-hit nodes with no branch.
 
     A run is fusable when every node has an accelerated module and each
     node's outputs are consumed *only* by the next node in the run (paper:
     "if the functions have no branch nor loop").  A fusion is accepted only
-    when ``fused_cost_ms(run) <= accept_threshold * max(individual times)``
+    when its estimated time ``<= accept_threshold * max(individual times)``
     — i.e. the fused module must not become the new bottleneck, encoding the
     paper's rejection of their slow fused cvtColor+cornerHarris module.
-    Without an estimator the pass is conservative and fuses nothing.
+
+    ``fused_cost_ms`` may be:
+
+    * ``None`` — conservative: the pass fuses nothing (seed behavior);
+    * ``"model"`` — use :func:`make_model_fused_cost`: accept fusions the
+      roofline says win (VMEM-resident intermediates), reject ones whose
+      working set spills VMEM;
+    * a callable ``run -> float | FusionEstimate`` — custom estimator.  A
+      returned :class:`~repro.core.costmodel.FusionEstimate` additionally
+      annotates the fused node with the modeled flops / HBM bytes so the
+      partitioners see the reduced traffic.
     """
     if fused_cost_ms is None:
         return ir
+    if fused_cost_ms == "model":
+        fused_cost_ms = make_model_fused_cost(ir, vmem_bytes=vmem_bytes)
     out = CourierIR(ir.name + "+fused")
     out.values = {k: type(v)(**{**v.__dict__, "consumers": list(v.consumers)})
                   for k, v in ir.values.items()}
@@ -245,7 +320,9 @@ def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
         if i + 1 >= len(ir.nodes):
             return False
         nxt = ir.nodes[i + 1].name
-        return all(ir.values[o].consumers == [nxt] for o in ir.nodes[i].outputs)
+        return all(ir.values[o].consumers == [nxt]
+                   and o not in ir.graph_outputs     # fusing would hide it
+                   for o in ir.nodes[i].outputs)
 
     i = 0
     new_nodes: list[Node] = []
@@ -256,17 +333,38 @@ def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
         run = ir.nodes[i:j + 1]
         if len(run) >= 2:
             est = fused_cost_ms(run)
+            fe = est if isinstance(est, FusionEstimate) else None
+            est_ms = fe.fused_ms if fe is not None else float(est)
             worst = max(n.time_ms or 0.0 for n in run)
-            if est <= accept_threshold * worst:
+            if est_ms <= accept_threshold * worst:
+                merged_params: dict = {}
+                for n in run:
+                    merged_params.update(n.params)
+                # external inputs: everything the run consumes that it does
+                # not itself produce (first-part inputs AND side operands of
+                # later parts, e.g. a fused matmul's weight), in first-use
+                # order — this is the fused node's calling convention.
+                produced = {o for n in run for o in n.outputs}
+                ext_inputs: list[str] = []
+                for n in run:
+                    for inp in n.inputs:
+                        if inp not in produced and inp not in ext_inputs:
+                            ext_inputs.append(inp)
                 fused = Node(
                     name="+".join(n.name for n in run),
                     fn_key="+".join(n.fn_key for n in run),
-                    inputs=list(run[0].inputs),
+                    inputs=ext_inputs,
                     outputs=list(run[-1].outputs),
-                    params={}, time_ms=est, placement="hw",
+                    params=merged_params, time_ms=est_ms, placement="hw",
                     fused_from=[n.name for n in run],
                     fused_input_shapes=[
-                        [ir.values[i].shape for i in n.inputs] for n in run])
+                        [ir.values[i].shape for i in n.inputs] for n in run],
+                    fused_params=[dict(n.params) for n in run],
+                    fused_part_inputs=[list(n.inputs) for n in run],
+                    fused_part_outputs=[list(n.outputs) for n in run])
+                if fe is not None:        # thread the modeled roofline through
+                    fused.flops = fe.cost.flops
+                    fused.bytes_rw = fe.cost.bytes_rw
                 new_nodes.append(fused)
                 i = j + 1
                 continue

@@ -32,6 +32,7 @@ Two token-stream execution paths are exposed:
 """
 from __future__ import annotations
 
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Sequence
@@ -44,7 +45,8 @@ from .ir import CourierIR, Node
 from .partition import (PipelinePlan, StagePlan, fuse_adjacent_hw,
                         partition_optimal, partition_paper)
 
-__all__ = ["PipelineGenerator", "BuiltPipeline", "assign_placements"]
+__all__ = ["PipelineGenerator", "BuiltPipeline", "StageFn",
+           "assign_placements", "make_stage_fns"]
 
 
 # --------------------------------------------------------------------------- #
@@ -102,21 +104,77 @@ def _liveness(ir: CourierIR, plan: PipelinePlan) -> list[list[str]]:
     return boundaries
 
 
+def _accepts_params(fn: Callable, params: dict) -> bool:
+    """True when ``fn(*args, **params)`` cannot fail on a param name.
+
+    A dedicated fused module is only used when it understands *every*
+    merged param of the fused run — silently dropping one (or crashing into
+    the Off-load Switcher's fallback on every call) would diverge from the
+    unfused semantics.  Unknown-signature callables are trusted only for
+    empty params.
+    """
+    if not params:
+        return True
+    import inspect
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return False
+    names = set()
+    for p in sig.parameters.values():
+        if p.kind == p.VAR_KEYWORD:
+            return True
+        if p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY):
+            names.add(p.name)
+    return set(params) <= names
+
+
 def _resolve_impl(node: Node, ir: CourierIR, db: ModuleDatabase) -> Callable:
     if node.fused_from:
-        # fused node "a+b": compose the impls of the parts, re-checking each
-        # part's shape-gated hw applicability against the input shapes it
-        # actually sees (recorded at fusion time) — resolving without shapes
-        # would pick hw even for shapes the module's `applicable` rejects.
+        # fused node "a+b": prefer a *dedicated* fused hw module registered
+        # in the database under the joined key (the single-pass mega-kernel
+        # — see ModuleDatabase.register_fused); fall back to composing the
+        # parts' impls, re-checking each part's shape-gated hw applicability
+        # against the input shapes it actually sees (recorded at fusion
+        # time) — resolving without shapes would pick hw even for shapes the
+        # module's `applicable` rejects.
+        shapes = [ir.values[i].shape for i in node.inputs]
+        e = db.lookup(node.fn_key)
+        if (e is not None and e.has_hw(*shapes)
+                and _accepts_params(e.accelerated, node.params)):
+            return e.accelerated
         keys = node.fn_key.split("+")
         part_shapes = node.fused_input_shapes or [[] for _ in keys]
+        part_params = node.fused_params or [{} for _ in keys]
         impls = [db.resolve(k, *ps, prefer_hw=True)[0]
                  for k, ps in zip(keys, part_shapes)]
 
-        def fused(*args: Any):
+        if node.fused_part_inputs:
+            # route each part exactly the values it consumed pre-fusion:
+            # external operands come from the fused node's args, carried
+            # intermediates from earlier parts' outputs.
+            routing = tuple(zip(tuple(map(tuple, node.fused_part_inputs)),
+                                tuple(map(tuple, node.fused_part_outputs))))
+            arg_names = tuple(node.inputs)
+            out_names = tuple(node.outputs)
+
+            def fused(*args: Any, _impls=tuple(impls),
+                      _params=tuple(part_params), **_merged: Any):
+                env = dict(zip(arg_names, args))
+                for (ins, outs), f, pp in zip(routing, _impls, _params):
+                    out = f(*[env[v] for v in ins], **pp)
+                    out_t = out if isinstance(out, (tuple, list)) else (out,)
+                    env.update(zip(outs, out_t))
+                res = tuple(env[v] for v in out_names)
+                return res[0] if len(res) == 1 else res
+            return fused
+
+        def fused(*args: Any, **_merged: Any):
+            # legacy linear-chain composition (fused nodes built without
+            # routing metadata, e.g. hand-constructed in tests)
             out = args
-            for f in impls:
-                out = f(*out)
+            for f, pp in zip(impls, part_params):
+                out = f(*out, **pp)
                 if not isinstance(out, (tuple, list)):
                     out = (out,)
             return out[0] if len(out) == 1 else tuple(out)
@@ -127,11 +185,67 @@ def _resolve_impl(node: Node, ir: CourierIR, db: ModuleDatabase) -> Callable:
     return fn
 
 
+class StageFn:
+    """One compiled pipeline stage: ``dict(live-in) -> dict(live-out)``.
+
+    Wraps the raw Python stage body in a *hoisted* ``jax.jit`` that lives for
+    the pipeline's lifetime, so steady-state serving re-enters the same
+    executable instead of re-tracing — and exposes the XLA compile count
+    (``jit``'s signature-cache size) so callers can assert **zero recompiles
+    after warmup**.  ``raw`` is kept for transform composition (the executor
+    vmaps it for micro-batching).
+
+    ``donate`` forwards the env argument's buffers to XLA as donated inputs:
+    stage outputs may reuse stage-input memory, killing the per-token
+    intermediate copies.  Only safe when the caller hands over ownership of
+    the env (true for all boundaries that contain no user-provided graph
+    inputs — the generator checks liveness before enabling it).
+    """
+
+    __slots__ = ("raw", "jitted", "donated", "_fn", "__name__")
+
+    def __init__(self, fn: Callable, *, jit: bool = True,
+                 donate: bool = False):
+        self.raw = fn
+        self.jitted = jit
+        self.donated = donate and jit
+        self._fn = (jax.jit(fn, donate_argnums=(0,) if donate else ())
+                    if jit else fn)
+        self.__name__ = getattr(fn, "__name__", "stage")
+
+    def __call__(self, env: dict) -> dict:
+        if self.donated:
+            # donation is a silent no-op on backends without it (CPU), but
+            # XLA warns at compile time; suppress only around *this* call so
+            # the host application's own donation diagnostics stay intact.
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                return self._fn(env)
+        return self._fn(env)
+
+    @property
+    def compiles(self) -> int:
+        """Number of distinct executables compiled for this stage."""
+        if not self.jitted:
+            return 0
+        try:
+            return self._fn._cache_size()
+        except AttributeError:          # non-jit fallback / older jax
+            return 0
+
+
 def make_stage_fns(ir: CourierIR, db: ModuleDatabase, plan: PipelinePlan,
-                   jit: bool = True) -> list[Callable]:
-    """One callable per stage: dict(live-in) -> dict(live-out)."""
+                   jit: bool = True, donate: bool = True) -> list[StageFn]:
+    """One callable per stage: dict(live-in) -> dict(live-out).
+
+    ``donate``: donate each stage's env buffers when the live-in boundary
+    consists purely of pipeline-owned intermediates (never stage 0, whose
+    env aliases caller-owned token arrays, and never a boundary where a
+    graph input is still live).
+    """
     boundaries = _liveness(ir, plan)
-    fns: list[Callable] = []
+    fns: list[StageFn] = []
     for k, s in enumerate(plan.stages):
         nodes = [ir.node(nn) for nn in s.node_names]
         impls = [_resolve_impl(n, ir, db) for n in nodes]
@@ -148,7 +262,9 @@ def make_stage_fns(ir: CourierIR, db: ModuleDatabase, plan: PipelinePlan,
                     env[name] = o
             return {k2: env[k2] for k2 in _live}
 
-        fns.append(jax.jit(stage) if jit else stage)
+        can_donate = (donate and jit and k > 0
+                      and not set(boundaries[k]) & set(ir.graph_inputs))
+        fns.append(StageFn(stage, jit=jit, donate=can_donate))
     return fns
 
 
@@ -163,6 +279,10 @@ class BuiltPipeline:
     graph_inputs: list[str]
     graph_outputs: list[str]
     max_in_flight: int | None = None         # TBB token-pool size
+    # lazily built jit(vmap(stage)) executables, hoisted here (not on each
+    # executor) so every executor over this pipeline shares one compiled set
+    # — rebuilding an executor must not recompile in steady state.
+    _batched_fns: list[Callable] | None = field(default=None, repr=False)
 
     # -- single token, through all stages (also the reference semantics) --- #
     def __call__(self, *args: Any):
@@ -212,15 +332,19 @@ class BuiltPipeline:
     # -- async executor (TBB parallel_pipeline analog) ----------------------- #
     def executor(self, *, max_in_flight: int | None = None,
                  microbatch: int = 1,
-                 pad_microbatches: bool = False) -> "PipelineExecutor":
+                 pad_microbatches: bool = False,
+                 buckets: "Sequence[int] | None" = None,
+                 ) -> "PipelineExecutor":
         """Build a :class:`~repro.core.executor.PipelineExecutor` over the
         compiled stages (bounded token pool, eager async issue, optional
-        per-stage micro-batching).  ``max_in_flight`` defaults to this
-        pipeline's own setting; the executor validates it (>= 1)."""
+        per-stage micro-batching with bucketed ragged-group padding).
+        ``max_in_flight`` defaults to this pipeline's own setting; the
+        executor validates it (>= 1).  Executors built here share this
+        pipeline's compiled (and vmapped) stage executables."""
         from .executor import PipelineExecutor
         return PipelineExecutor.from_pipeline(
             self, max_in_flight=max_in_flight, microbatch=microbatch,
-            pad_microbatches=pad_microbatches)
+            pad_microbatches=pad_microbatches, buckets=buckets)
 
     def run_async(self, tokens: Iterable[tuple | Any], *,
                   max_in_flight: int | None = None,
@@ -237,6 +361,36 @@ class BuiltPipeline:
 
     def describe(self) -> str:
         return self.plan.describe()
+
+    # -- compile accounting (zero-recompile steady state) ------------------- #
+    def batched_stage_fns(self) -> list[Callable]:
+        """Shared ``jit(vmap(stage))`` set for micro-batched execution.
+
+        Built once per pipeline and handed to every executor, so executor
+        churn (serving re-plans, pool resizes) never pays a recompile.
+        """
+        if self._batched_fns is None:
+            self._batched_fns = [
+                jax.jit(jax.vmap(getattr(f, "raw", f)))
+                for f in self.stage_fns]
+        return self._batched_fns
+
+    def compile_count(self) -> int:
+        """Total executables compiled across all stage fns (incl. vmapped).
+
+        Steady-state serving must hold this constant: after warmup, token
+        waves of already-seen shapes re-enter cached executables only.
+        """
+        total = 0
+        for f in self.stage_fns:
+            total += getattr(f, "compiles", 0)
+        if self._batched_fns is not None:
+            for f in self._batched_fns:
+                try:
+                    total += f._cache_size()
+                except AttributeError:
+                    pass
+        return total
 
     # -- helpers ------------------------------------------------------------ #
     def _validated_pool(self) -> int:
@@ -275,13 +429,19 @@ class PipelineGenerator:
                  fused_cost_ms: Callable[[list[Node]], float] | None = None,
                  max_stages: int | None = None,
                  comm_bw_bytes_per_ms: float | None = None,
-                 jit: bool = True,
+                 jit: bool = True, donate: bool = True,
                  max_in_flight: int | None = None) -> BuiltPipeline:
         if self.cost_model is not None:
             self.cost_model.annotate(ir)
         assign_placements(ir, self.db, prefer_hw=prefer_hw)
         if fuse:
-            ir = fuse_adjacent_hw(ir, self.db, fused_cost_ms=fused_cost_ms)
+            # with no explicit estimator the *cost model* decides (fusions
+            # that keep intermediates VMEM-resident win; spills rejected) —
+            # the paper's fixed reject-policy becomes a modeled choice.
+            ir = fuse_adjacent_hw(
+                ir, self.db,
+                fused_cost_ms=fused_cost_ms if fused_cost_ms is not None
+                else "model")
             assign_placements(ir, self.db, prefer_hw=prefer_hw)
         if policy == "paper":
             plan = partition_paper(ir, n_threads=n_threads)
@@ -290,7 +450,7 @@ class PipelineGenerator:
                                      comm_bw_bytes_per_ms=comm_bw_bytes_per_ms)
         else:
             raise ValueError(f"unknown policy {policy!r}")
-        fns = make_stage_fns(ir, self.db, plan, jit=jit)
+        fns = make_stage_fns(ir, self.db, plan, jit=jit, donate=donate)
         return BuiltPipeline(ir=ir, plan=plan, stage_fns=fns,
                              graph_inputs=list(ir.graph_inputs),
                              graph_outputs=list(ir.graph_outputs),

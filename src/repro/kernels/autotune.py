@@ -1,0 +1,146 @@
+"""Block-size autotuner with a persistent on-disk cache.
+
+The fused Pallas kernels are parameterized by a row-block size; the best
+value depends on (kernel, shape, dtype) and on which target executes it.
+Rather than hardcoding one constant, the kernels ask :func:`autotune` to
+
+* sweep a candidate list with a scoring function — either an analytical
+  roofline score (cheap, deterministic, the default) or wall-clock timing
+  of the actual kernel (``measure`` candidates built by the caller), and
+* memoize the winner in a **persistent on-disk cache** keyed by
+  ``(kernel, shape, dtype, ...)`` so later processes (and the serving
+  steady state) skip the sweep entirely.
+
+Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro-autotune``.  One JSON file, written atomically; safe to
+delete at any time (``AutotuneCache.clear`` or ``rm -rf``) — the next run
+re-tunes and re-populates it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+__all__ = ["AutotuneCache", "TuneResult", "autotune", "default_cache",
+           "cache_dir"]
+
+
+def cache_dir() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro-autotune"))
+
+
+class AutotuneCache:
+    """Tiny persistent key → winner store (one JSON file, write-through).
+
+    ``hits``/``misses`` count :meth:`get` outcomes since construction, so
+    tests (and ``cache_info`` callers) can observe memoization behavior.
+    """
+
+    def __init__(self, path: str | None = None):
+        self._path = path
+        self._mem: dict[str, Any] | None = None
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def path(self) -> str:
+        return self._path or cache_dir()
+
+    @property
+    def file(self) -> str:
+        return os.path.join(self.path, "autotune.json")
+
+    def _load(self) -> dict[str, Any]:
+        if self._mem is None:
+            try:
+                with open(self.file) as f:
+                    self._mem = json.load(f)
+            except (OSError, ValueError):
+                self._mem = {}
+        return self._mem
+
+    def get(self, key: str) -> Any | None:
+        with self._lock:
+            val = self._load().get(key)
+            if val is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return val
+
+    def put(self, key: str, value: Any) -> None:
+        with self._lock:
+            mem = self._load()
+            mem[key] = value
+            try:
+                os.makedirs(self.path, exist_ok=True)
+                tmp = self.file + ".tmp"
+                with open(tmp, "w") as f:
+                    json.dump(mem, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.file)       # atomic on POSIX
+            except OSError:
+                pass                             # cache is best-effort only
+
+    def clear(self) -> None:
+        with self._lock:
+            self._mem = {}
+            try:
+                os.remove(self.file)
+            except OSError:
+                pass
+
+    def info(self) -> dict[str, Any]:
+        with self._lock:
+            return {"path": self.file, "entries": len(self._load()),
+                    "hits": self.hits, "misses": self.misses}
+
+
+default_cache = AutotuneCache()
+
+
+@dataclass
+class TuneResult:
+    """Outcome of one autotune query."""
+
+    best: Any                                   # winning candidate
+    source: str                                 # "cache" | "tuned"
+    scores: dict[str, float] = field(default_factory=dict)
+
+
+def make_key(kernel: str, key_parts: Sequence[Any]) -> str:
+    return kernel + "::" + ",".join(str(p) for p in key_parts)
+
+
+def autotune(kernel: str, key_parts: Sequence[Any],
+             candidates: Sequence[Any],
+             score: Callable[[Any], float], *,
+             cache: AutotuneCache | None = None) -> TuneResult:
+    """Pick the candidate with the lowest score, memoized on disk.
+
+    ``key_parts`` must capture everything the winner depends on (shape,
+    dtype, static kernel params, scoring mode); ``score`` returns a
+    lower-is-better figure (analytic cost or measured ms; ``inf`` marks an
+    infeasible candidate, e.g. a block that would spill VMEM).  All-infeasible
+    sweeps fall back to the first candidate rather than failing, so callers
+    always get something runnable.
+    """
+    if not candidates:
+        raise ValueError(f"autotune({kernel!r}): empty candidate list")
+    cache = cache if cache is not None else default_cache
+    key = make_key(kernel, key_parts)
+    hit = cache.get(key)
+    if hit is not None and hit.get("best") in list(candidates):
+        return TuneResult(best=hit["best"], source="cache",
+                          scores=hit.get("scores", {}))
+    scores = {str(c): float(score(c)) for c in candidates}
+    best = min(candidates, key=lambda c: scores[str(c)])
+    if scores[str(best)] == float("inf"):
+        best = candidates[0]
+    cache.put(key, {"best": best, "scores": scores})
+    return TuneResult(best=best, source="tuned", scores=scores)

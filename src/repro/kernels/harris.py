@@ -20,6 +20,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .autotune import AutotuneCache, autotune
 
 ROW_BLOCK = 8          # rows per program (8 sublanes × 128-lane rows)
 INTERPRET = True       # container is CPU; TPU target flips this off
@@ -126,3 +129,137 @@ def convert_scale_abs(x: jax.Array, alpha: float = 1.0, beta: float = 0.0, *,
         out_shape=jax.ShapeDtypeStruct((H, W), jnp.float32),
         interpret=INTERPRET if interpret is None else interpret,
     )(x)
+
+
+# --------------------------------------------------------------------------- #
+# Fused mega-kernel: cvtColor → cornerHarris [→ convertScaleAbs] in ONE pass
+# --------------------------------------------------------------------------- #
+# The unfused chain bounces gray/response through HBM between pallas_calls
+# (the paper's "intermediate data ... stored in the external memory").  Here
+# each program converts its padded RGB row-block to gray in a VMEM scratch
+# tile, runs Sobel + box + response on it, and (optionally) the
+# convertScaleAbs epilogue — the gray and response tiles never leave VMEM.
+# On the paper's FPGA the fused cvtColor+cornerHarris module was "too slow
+# to use"; on TPU the cost model accepts it because the eliminated HBM
+# round-trips dominate (see repro.core.costmodel.fused_cost).
+
+_F32 = 4                                        # intermediate element bytes
+_VMEM_BUDGET = 96 * 1024 * 1024                 # leave headroom of 128M VMEM
+
+
+def _fused_harris_kernel(img_ref, o_ref, gray_ref, *, rb: int, W: int,
+                         block_size: int, k: float, halo: int,
+                         with_csa: bool, alpha: float, beta: float):
+    i = pl.program_id(0)
+    rgb = pl.load(img_ref, (pl.ds(i * rb, rb + 2 * halo), slice(None),
+                            slice(None))).astype(jnp.float32)
+    # cvtColor on the padded block; the gray tile lives in VMEM scratch and
+    # is consumed in-place by the stencil below — no HBM round-trip.
+    gray_ref[...] = (0.299 * rgb[..., 0] + 0.587 * rgb[..., 1]
+                     + 0.114 * rgb[..., 2])
+    rows = gray_ref[...]                        # [rb+2h, W+2h+bs-1]
+
+    def sh(a, dy, dx, h, w):
+        return jax.lax.dynamic_slice(a, (dy, dx), (h, w))
+
+    h1, w1 = rb + 2 * halo - 2, W + 2 * halo - 2
+    dx = (sh(rows, 0, 2, h1, w1) + 2 * sh(rows, 1, 2, h1, w1)
+          + sh(rows, 2, 2, h1, w1)
+          - sh(rows, 0, 0, h1, w1) - 2 * sh(rows, 1, 0, h1, w1)
+          - sh(rows, 2, 0, h1, w1))
+    dy = (sh(rows, 2, 0, h1, w1) + 2 * sh(rows, 2, 1, h1, w1)
+          + sh(rows, 2, 2, h1, w1)
+          - sh(rows, 0, 0, h1, w1) - 2 * sh(rows, 0, 1, h1, w1)
+          - sh(rows, 0, 2, h1, w1))
+    ixx, iyy, ixy = dx * dx, dy * dy, dx * dy
+
+    def box(a):
+        out = jnp.zeros((rb, W), jnp.float32)
+        for by in range(block_size):
+            for bx in range(block_size):
+                out = out + sh(a, by, bx, rb, W)
+        return out
+
+    sxx, syy, sxy = box(ixx), box(iyy), box(ixy)
+    det = sxx * syy - sxy * sxy
+    tr = sxx + syy
+    resp = det - k * tr * tr
+    if with_csa:                                # fused epilogue, still VMEM
+        resp = jnp.clip(jnp.abs(resp * alpha + beta), 0.0, 255.0)
+    o_ref[...] = resp
+
+
+def _roofline_rb_score(rb: int, H: int, Wp: int, halo: int) -> float:
+    """Lower-is-better analytic score for a fused-kernel row block.
+
+    HBM read amplification from the halo is ``(rb + 2*halo) / rb``; a small
+    per-program launch term rewards larger blocks; blocks whose resident
+    tiles (RGB load + gray scratch + ~6 stencil temporaries) would overflow
+    VMEM are infeasible.
+    """
+    tile_rows = rb + 2 * halo
+    resident = tile_rows * Wp * _F32 * (3 + 1 + 6)
+    if resident > _VMEM_BUDGET:
+        return float("inf")
+    return (tile_rows / rb) + 0.25 * (H / rb) / max(H, 1)
+
+
+def fused_row_block(H: int, W: int, block_size: int = 2, *,
+                    cache: AutotuneCache | None = None) -> int:
+    """Autotuned row-block for :func:`harris_fused` (memoized on disk)."""
+    halo = 1 + block_size // 2
+    Wp = W + 2 * halo + block_size - 1
+    cands = [rb for rb in (8, 16, 32, 64, 128, 256) if H % rb == 0]
+    if not cands:
+        return H
+    res = autotune("harris_fused", (H, W, "float32", block_size), cands,
+                   lambda rb: _roofline_rb_score(rb, H, Wp, halo),
+                   cache=cache)
+    return int(res.best)
+
+
+def harris_fused(img: jax.Array, block_size: int = 2, k: float = 0.04,
+                 alpha: float = 1.0, beta: float = 0.0, *,
+                 with_csa: bool = True, row_block: int | None = None,
+                 interpret: bool | None = None,
+                 cache: AutotuneCache | None = None) -> jax.Array:
+    """Single-pass fused Harris: cvtColor → cornerHarris [→ convertScaleAbs].
+
+    One ``pallas_call`` over row blocks; gray and response tiles stay in
+    scratch VMEM, with the stencil halo re-loaded from the edge-padded HBM
+    input at row-block boundaries (2-row overlap between programs — the
+    halo-exchange analog of the paper's line-buffer BRAMs).
+    ``row_block=None`` asks the autotuner (persistent cache) for the block.
+    """
+    H, W, _C = img.shape
+    halo = 1 + block_size // 2
+    if row_block is None:
+        rb = fused_row_block(H, W, block_size, cache=cache)
+    else:
+        rb = row_block
+    rb = rb if H % rb == 0 else H
+    pad = jnp.pad(img, ((halo, halo + block_size - 1),
+                        (halo, halo + block_size - 1), (0, 0)), mode="edge")
+    Wp = W + 2 * halo + block_size - 1
+    kernel = functools.partial(_fused_harris_kernel, rb=rb, W=W,
+                               block_size=block_size, k=k, halo=halo,
+                               with_csa=with_csa, alpha=alpha, beta=beta)
+    return pl.pallas_call(
+        kernel,
+        grid=(H // rb,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((rb, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((rb + 2 * halo, Wp), jnp.float32)],
+        interpret=INTERPRET if interpret is None else interpret,
+    )(pad)
+
+
+def harris_fused_pair(img: jax.Array, block_size: int = 2, k: float = 0.04,
+                      **kwargs) -> jax.Array:
+    """cvtColor+cornerHarris fused module (no epilogue) — the DB entry for
+    the demo chain, where ``normalize`` separates cornerHarris from
+    convertScaleAbs and limits the fusable run to two functions."""
+    kwargs.pop("alpha", None)
+    kwargs.pop("beta", None)
+    return harris_fused(img, block_size, k, with_csa=False, **kwargs)

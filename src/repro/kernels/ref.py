@@ -33,6 +33,14 @@ def reference_rmsnorm(x: jax.Array, scale: jax.Array,
             * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
 
 
+def reference_rmsnorm_matmul(x: jax.Array, scale: jax.Array, w: jax.Array,
+                             eps: float = 1e-6) -> jax.Array:
+    """Unfused composition oracle: rmsnorm then matmul, f32 accumulation."""
+    y = reference_rmsnorm(x, scale, eps).astype(jnp.float32)
+    return jnp.dot(y, w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
 # Harris oracles live with the model (repro.models.harris) — re-exported here
 # so every kernel has its ref in one namespace.
 from repro.models.harris import (convert_scale_abs as reference_convert_scale_abs,
@@ -40,5 +48,6 @@ from repro.models.harris import (convert_scale_abs as reference_convert_scale_ab
                                  cvt_color as reference_cvt_color)
 
 __all__ = ["reference_attention", "reference_rmsnorm",
+           "reference_rmsnorm_matmul",
            "reference_convert_scale_abs", "reference_corner_harris",
            "reference_cvt_color"]

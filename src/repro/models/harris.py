@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.costmodel import NodeCost, elementwise_cost, stencil_cost
+from repro.core.costmodel import (NodeCost, elementwise_cost, fused_cost,
+                                  stencil_cost)
 from repro.core.database import ModuleDatabase
 
 
@@ -119,6 +120,44 @@ def _c_csa(shapes, dtypes, params) -> NodeCost:
     return elementwise_cost(h * w, flops_per_el=4, bytes_per_el=4, n_operands=2)
 
 
+def _fused_harris_vmem(w: int, n_parts: int, block_size: int = 2) -> int:
+    """Resident bytes of the fused row-block kernel (rb=8 slab + halos).
+
+    Mirrors ``kernels.harris.harris_fused``: an (rb + 2*halo)-row slab of
+    the padded width for the RGB load (3 planes) + the gray scratch +
+    ~6 stencil temporaries, plus one response/epilogue tile per fused part
+    beyond the first; halo grows with the box ``block_size``.
+    """
+    rb = 8
+    halo = 1 + block_size // 2
+    wp = w + 2 * halo + block_size - 1
+    bufs = 3 + 1 + 6 + (n_parts - 1)
+    return (rb + 2 * halo) * wp * 4 * bufs
+
+
+def _c_fused_pair(shapes, dtypes, params) -> NodeCost:
+    """Synthesis-report analog for the fused cvtColor+cornerHarris module:
+    the gray intermediate stays in VMEM, its HBM write+read disappears."""
+    h, w = shapes[0][:2]
+    bs = (params or {}).get("block_size", 2)
+    fe = fused_cost([_c_cvt(shapes, dtypes, params),
+                     _c_harris([(h, w)], dtypes, params)],
+                    intermediate_bytes=4 * h * w,
+                    vmem_required=_fused_harris_vmem(w, 2, bs))
+    return fe.cost
+
+
+def _c_fused_mega(shapes, dtypes, params) -> NodeCost:
+    h, w = shapes[0][:2]
+    bs = (params or {}).get("block_size", 2)
+    fe = fused_cost([_c_cvt(shapes, dtypes, params),
+                     _c_harris([(h, w)], dtypes, params),
+                     _c_csa([(h, w)], dtypes, params)],
+                    intermediate_bytes=2 * (4 * h * w),   # gray + response
+                    vmem_required=_fused_harris_vmem(w, 3, bs))
+    return fe.cost
+
+
 def make_harris_db(with_hw: bool = True) -> ModuleDatabase:
     """Build the module database for the case study.
 
@@ -138,6 +177,17 @@ def make_harris_db(with_hw: bool = True) -> ModuleDatabase:
             db.add_accelerated("cvtColor", hk.cvt_color)
             db.add_accelerated("cornerHarris", hk.corner_harris)
             db.add_accelerated("convertScaleAbs", hk.convert_scale_abs)
+            # dedicated fused modules (single-pass mega-kernels): resolved
+            # by the backend for fused nodes when the cost model accepts
+            # the fusion.  In the demo chain `normalize` (sw-only) sits
+            # between cornerHarris and convertScaleAbs, so the fusable run
+            # is the pair; the 3-op mega-kernel serves normalize-free
+            # variants of the chain.
+            db.register_fused(("cvtColor", "cornerHarris"),
+                              hk.harris_fused_pair, cost_hw=_c_fused_pair)
+            db.register_fused(("cvtColor", "cornerHarris",
+                               "convertScaleAbs"),
+                              hk.harris_fused, cost_hw=_c_fused_mega)
         except ImportError:
             pass
     return db

@@ -16,8 +16,14 @@ When the real `hypothesis` is installed it is used untouched.
 """
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Keep the block-size autotuner's persistent cache out of the user's home
+# directory during test runs (tests that care pass their own tmp cache).
+os.environ.setdefault("REPRO_AUTOTUNE_CACHE",
+                      tempfile.mkdtemp(prefix="repro-autotune-test-"))
 
 
 def _install_hypothesis_shim() -> None:
