@@ -3,20 +3,21 @@
 PY      ?= python
 PYPATH  := src:.
 
-.PHONY: test test-fast bench bench-smoke clean-autotune
+.PHONY: test test-fast bench bench-smoke ci clean-autotune
 
 test:            ## full tier-1 suite (incl. slow markers)
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
 
-test-fast:       ## fast split (excludes @slow: subprocess/multi-device tests)
+test-fast:       ## fast split (excludes @slow: subprocess/multi-device/soak tests)
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q -m "not slow"
 
-bench:           ## all paper tables + fusion benchmark; writes BENCH_pipeline.json
+bench:           ## all paper tables + fusion + replan benchmarks; writes BENCH_pipeline.json
 	PYTHONPATH=$(PYPATH) $(PY) benchmarks/run.py
 
-bench-smoke:     ## single CI entry point: fast tests + 2-token pipeline benchmark
-	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q -m "not slow"
+bench-smoke:     ## 2-token pipeline + fusion + adaptive-replan smoke benchmark
 	PYTHONPATH=$(PYPATH) $(PY) benchmarks/run.py --smoke
+
+ci: test-fast bench-smoke  ## single CI entry point: fast tests, then smoke benchmark
 
 clean-autotune:  ## drop the persistent block-size autotune cache
 	PYTHONPATH=$(PYPATH) $(PY) -c "from repro.kernels.autotune import \

@@ -33,15 +33,15 @@ def _emit(mod) -> None:
 
 
 def main() -> None:
-    from benchmarks import (fig4_callgraph, fusion, roofline, table1_pipeline,
-                            table2_modules, table3_resources)
+    from benchmarks import (fig4_callgraph, fusion, replan, roofline,
+                            table1_pipeline, table2_modules, table3_resources)
 
     smoke = "--smoke" in sys.argv[1:]
     print("name,value,derived")
     if smoke:
-        # 2-token pipeline benchmark + fusion comparison, small frames;
-        # one measurement feeds both the CSV rows and BENCH_pipeline.json
-        # (measured_numbers / fusion.payload are memoized)
+        # 2-token pipeline benchmark + fusion comparison + adaptive-replan
+        # smoke, small frames; one measurement feeds both the CSV rows and
+        # BENCH_pipeline.json (measured_numbers / *.payload are memoized)
         try:
             m = table1_pipeline.measured_numbers(n_frames=2, size=(64, 96))
             for key in ("sequential_ms", "wavefront_ms", "async_ms"):
@@ -49,6 +49,13 @@ def main() -> None:
             f = fusion.payload(smoke=True)["harris_kernel"]
             print(f"smoke.fusion.speedup,{f['speedup']},"
                   f"fused {f['fused_ms']} ms vs chain {f['chain_ms']} ms")
+            rep = replan.payload(smoke=True)
+            print(f"smoke.replan.recovery,{rep['sim']['recovery']},"
+                  f"adaptive {rep['sim']['tps_adaptive']} tps vs static "
+                  f"{rep['sim']['tps_static']} tps")
+            print(f"smoke.replan.dropped,{rep['hot_swap']['dropped']},"
+                  f"{rep['hot_swap']['served']} served; "
+                  f"{rep['hot_swap']['recompiles_after_warmup']} recompiles")
             path = table1_pipeline.write_bench_json(smoke=True)
             print(f"smoke.bench_json,0,{path}")
         except Exception as e:
@@ -57,8 +64,10 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
             sys.exit(1)
         return
+    # replan last: its thread pools and serving loops are the noisiest
+    # neighbors for the wall-clock benchmarks that precede it
     for mod in (table1_pipeline, table2_modules, table3_resources,
-                fig4_callgraph, fusion, roofline):
+                fig4_callgraph, fusion, roofline, replan):
         _emit(mod)
     try:
         path = table1_pipeline.write_bench_json()

@@ -169,15 +169,19 @@ def measured_numbers(n_frames: int = 12, hw: bool = True,
 # --------------------------------------------------------------------------- #
 def bench_payload(smoke: bool = False) -> dict:
     """sequential / wavefront / async / fused tokens-per-sec + bottleneck ms,
-    plus the fusion benchmark — the perf trajectory tracked across PRs."""
-    from benchmarks import fusion
+    plus the fusion and adaptive-replan benchmarks — the perf trajectory
+    tracked across PRs."""
+    from benchmarks import fusion, replan
 
     n_frames = 2 if smoke else 12
     size = (64, 96) if smoke else (270, 480)
     # fusion comparison first: it is the finest-grained measurement and the
-    # most sensitive to allocator/background state left by the big-frame run
+    # most sensitive to allocator/background state left by the big-frame
+    # run; the replan benchmark LAST — its thread pools and serving loops
+    # are the noisiest neighbors of all
     fus = fusion.payload(smoke=smoke)
     m = measured_numbers(n_frames=n_frames, hw=True, size=size)
+    rep = replan.payload(smoke=smoke)
     return {
         "bench": "table1_pipeline", "smoke": bool(smoke),
         "shape": m["shape"], "n_frames": m["n_frames"],
@@ -197,6 +201,7 @@ def bench_payload(smoke: bool = False) -> dict:
                           "async_ms", "microbatch_ms")},
         "compile_count_steady": m["compile_count"],
         "fusion": fus,
+        "replan": rep,
     }
 
 

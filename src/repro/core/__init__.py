@@ -11,9 +11,10 @@ Flow (paper Fig. 1):
   courier_offload       Step 9     — deployable wrapper w/ Off-load Switcher
 """
 from .costmodel import (CostModel, FusionEstimate, NodeCost, PEAK_FLOPS_BF16,
-                        HBM_BW, ICI_BW_PER_LINK, HBM_BYTES, VMEM_BYTES,
-                        attention_cost, elementwise_cost, fused_cost,
-                        matmul_cost, measure_ms, stencil_cost)
+                        HBM_BW, ICI_BW_PER_LINK, HBM_BYTES, PROFILE_MARGIN,
+                        VMEM_BYTES, attention_cost, elementwise_cost,
+                        fused_cost, matmul_cost, measure_ms,
+                        measured_contradicts, stencil_cost)
 from .database import ModuleDatabase, ModuleEntry, default_db
 from .executor import (ExecutorStats, PendingToken, PipelineExecutor,
                        StageCounters)
@@ -21,27 +22,28 @@ from .ir import CourierIR, Node, Value, linear_ir
 from .offloader import OffloadedFunction, OffloadPlan, courier_offload
 from .partition import (PipelinePlan, StagePlan, fuse_adjacent_hw,
                         fused_working_set_bytes, make_model_fused_cost,
-                        partition_optimal, partition_paper)
+                        partition_optimal, partition_paper, split_fused_node)
 from .pipeline import (BuiltPipeline, PipelineGenerator, StageFn,
                        assign_placements, make_stage_fns)
+from .profiler import StageProfiler
 from .spmd_pipeline import (pipeline_microbatches, spmd_pipeline_fn,
                             stack_stage_params, stage_apply)
 from .tracer import Frontend, Library, deploy
 
 __all__ = [
     "CostModel", "FusionEstimate", "NodeCost", "PEAK_FLOPS_BF16", "HBM_BW",
-    "ICI_BW_PER_LINK", "HBM_BYTES", "VMEM_BYTES",
+    "ICI_BW_PER_LINK", "HBM_BYTES", "PROFILE_MARGIN", "VMEM_BYTES",
     "attention_cost", "elementwise_cost", "fused_cost", "matmul_cost",
-    "measure_ms", "stencil_cost",
+    "measure_ms", "measured_contradicts", "stencil_cost",
     "ModuleDatabase", "ModuleEntry", "default_db",
     "ExecutorStats", "PendingToken", "PipelineExecutor", "StageCounters",
     "CourierIR", "Node", "Value", "linear_ir",
     "OffloadedFunction", "OffloadPlan", "courier_offload",
     "PipelinePlan", "StagePlan", "fuse_adjacent_hw",
     "fused_working_set_bytes", "make_model_fused_cost", "partition_optimal",
-    "partition_paper",
+    "partition_paper", "split_fused_node",
     "BuiltPipeline", "PipelineGenerator", "StageFn", "assign_placements",
-    "make_stage_fns",
+    "make_stage_fns", "StageProfiler",
     "pipeline_microbatches", "spmd_pipeline_fn", "stack_stage_params",
     "stage_apply",
     "Frontend", "Library", "deploy",

@@ -196,6 +196,32 @@ def attention_cost(batch: int, q_len: int, kv_len: int, heads: int,
 
 
 # --------------------------------------------------------------------------- #
+# Measured vs modeled (the online-profile write-back contract)
+# --------------------------------------------------------------------------- #
+PROFILE_MARGIN = 1.5      # default measured-vs-model contradiction factor
+
+
+def measured_contradicts(model_ms: float | None, measured_ms: float | None,
+                         margin: float = PROFILE_MARGIN) -> bool:
+    """True when a measurement deviates from the model by ``margin``x.
+
+    The re-planner's trigger condition: a measured stage/node time that is
+    ``>= margin`` times the estimate (or ``<= 1/margin`` of it) means the
+    cost table the current plan was balanced on is wrong, so fuse/no-fuse
+    and stage-boundary decisions deserve a revisit.  ``None`` on either
+    side never contradicts (nothing measured, or nothing modeled).
+    """
+    if model_ms is None or measured_ms is None:
+        return False
+    if margin < 1.0:
+        raise ValueError(f"margin must be >= 1.0 (got {margin})")
+    if model_ms <= 0.0:
+        return measured_ms > 0.0
+    ratio = measured_ms / model_ms
+    return ratio >= margin or ratio <= 1.0 / margin
+
+
+# --------------------------------------------------------------------------- #
 # Measured profiles (the Frontend's profile log)
 # --------------------------------------------------------------------------- #
 def measure_ms(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -216,14 +242,30 @@ def measure_ms(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
 
 @dataclass
 class CostModel:
-    """Per-fn_key cost providers; mixes measured and analytical sources."""
+    """Per-fn_key cost providers; mixes measured and analytical sources.
+
+    ``measured`` holds per-function EMA wall times fed by the online
+    profiler (:meth:`observe`); they *supersede* the analytical providers
+    during :meth:`annotate` — the paper's rule that a runtime profile
+    outranks a synthesis-report estimate, kept live while serving.
+    """
 
     chips: int = 1
     ici_links: int = 1
     providers: dict[str, Callable[..., NodeCost]] = field(default_factory=dict)
+    measured: dict[str, float] = field(default_factory=dict)
+    measure_alpha: float = 0.25
 
     def register(self, fn_key: str, provider: Callable[..., NodeCost]) -> None:
         self.providers[fn_key] = provider
+
+    def observe(self, fn_key: str, ms: float) -> float:
+        """Fold one measured wall time into the per-function EMA."""
+        prev = self.measured.get(fn_key)
+        a = self.measure_alpha
+        self.measured[fn_key] = float(ms) if prev is None \
+            else (1.0 - a) * prev + a * float(ms)
+        return self.measured[fn_key]
 
     def cost(self, fn_key: str, *args, **kwargs) -> NodeCost:
         if fn_key not in self.providers:
@@ -231,7 +273,13 @@ class CostModel:
         return self.providers[fn_key](*args, **kwargs)
 
     def annotate(self, ir) -> None:
-        """Fill Node.flops / bytes from providers when a node has no profile."""
+        """Fill Node.flops / bytes from providers when a node has no profile.
+
+        Measured times (:meth:`observe`) win over both the provider estimate
+        and any pre-existing estimate on the node; nodes they touch are
+        marked ``time_source="profile"`` so later estimator passes leave
+        them alone.
+        """
         for n in ir.nodes:
             if n.fn_key in self.providers:
                 shapes = [ir.values[i].shape for i in n.inputs]
@@ -243,3 +291,7 @@ class CostModel:
                 n.flops, n.bytes_rw = c.flops, c.bytes_rw
                 if n.time_ms is None:
                     n.time_ms = c.time_ms(self.chips, self.ici_links)
+            m = self.measured.get(n.fn_key)
+            if m is not None:
+                n.time_ms = m
+                n.time_source = "profile"

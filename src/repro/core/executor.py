@@ -28,6 +28,17 @@ pool:
 * **Counters** — per-stage issue counts/host-issue time and pool occupancy
   are tracked continuously; :meth:`PipelineExecutor.stats` exposes
   throughput and occupancy for the serving layer's metrics endpoint.
+* **Online profiling** — an attached
+  :class:`~repro.core.profiler.StageProfiler` is fed measured per-stage
+  wall times: exactly in threaded mode, by sampled blocking barriers in
+  async mode (every ``profiler.sample_every``-th group), so the adaptive
+  re-planner always has live costs without stalling steady-state traffic.
+* **Threaded stage workers** (``stage_workers=True``) — one serial worker
+  thread per stage, TBB's actual execution model.  Each admitted group's
+  stage ``s`` runs to completion inside worker ``s`` and hands its env to
+  worker ``s+1``; host-bound stages (callbacks, eager sw fallbacks) then
+  overlap across *threads* instead of relying on device async dispatch,
+  which on CPU backends provides no inter-stage overlap at all.
 
 Completion is in-order (tokens retire oldest-first), matching the paper's
 ``serial_in_order`` first/last filters.
@@ -37,6 +48,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Sequence
 
@@ -70,10 +82,12 @@ class StageCounters:
     issued: int = 0        # stage invocations (one per token group)
     tokens: int = 0        # tokens pushed through this stage
     issue_ms: float = 0.0  # host time spent dispatching this stage
+    exec_ms: float = 0.0   # measured stage wall time (threaded/sampled only)
 
     def as_dict(self) -> dict:
         return {"issued": self.issued, "tokens": self.tokens,
-                "issue_ms": round(self.issue_ms, 4)}
+                "issue_ms": round(self.issue_ms, 4),
+                "exec_ms": round(self.exec_ms, 4)}
 
 
 @dataclass
@@ -121,7 +135,8 @@ class ExecutorStats:
 class _Group:
     """One admitted token group: a (possibly stacked) env fully issued."""
 
-    __slots__ = ("env", "size", "stacked", "results", "done", "error", "lock")
+    __slots__ = ("env", "size", "stacked", "results", "done", "error", "lock",
+                 "future")
 
     def __init__(self, env: dict | None, size: int, stacked: bool):
         self.env = env                # None until all stages are issued
@@ -131,6 +146,7 @@ class _Group:
         self.done = False
         self.error: BaseException | None = None   # stage issue failed
         self.lock = threading.Lock()  # serializes issue + finalization
+        self.future: Future | None = None  # last-stage future (threaded mode)
 
 
 class PendingToken:
@@ -191,6 +207,18 @@ class PipelineExecutor:
         Pre-built ``jit(vmap(stage))`` list to *share* across executors
         (see ``BuiltPipeline.batched_stage_fns``).  When ``None`` the
         executor builds its own lazily.
+    profiler:
+        Optional :class:`~repro.core.profiler.StageProfiler` fed measured
+        per-stage wall times (every stage call in threaded mode; every
+        ``profiler.sample_every``-th group via a blocking barrier in async
+        mode).  ``warmup`` suspends it so compile time never pollutes the
+        profile.
+    stage_workers:
+        Run each stage in its own serial worker thread (the TBB execution
+        model): stage ``s+1`` of a group starts when stage ``s`` finished,
+        and different stages overlap across OS threads.  Use for pipelines
+        whose stage time is host-bound (eager sw fallbacks, callbacks) —
+        JAX async dispatch alone gives those zero overlap on CPU.
     """
 
     def __init__(self, stage_fns: Sequence[Callable],
@@ -198,7 +226,8 @@ class PipelineExecutor:
                  *, max_in_flight: int | None = None, microbatch: int = 1,
                  pad_microbatches: bool = False,
                  buckets: Sequence[int] | None = None,
-                 batched_fns: Sequence[Callable] | None = None):
+                 batched_fns: Sequence[Callable] | None = None,
+                 profiler: Any = None, stage_workers: bool = False):
         if max_in_flight is not None and max_in_flight < 1:
             raise ValueError(
                 f"max_in_flight must be >= 1 (got {max_in_flight}); "
@@ -220,9 +249,20 @@ class PipelineExecutor:
             self.buckets = None
         self._batched_fns: list[Callable] | None = (
             list(batched_fns) if batched_fns is not None else None)
+        self.profiler = profiler
+        self.stage_workers = bool(stage_workers)
+        self._pools: list[ThreadPoolExecutor] | None = None
+        if self.stage_workers:
+            # one SERIAL worker per stage: per-stage ordering is preserved
+            # (TBB's serial filters) while distinct stages run concurrently
+            self._pools = [
+                ThreadPoolExecutor(max_workers=1,
+                                   thread_name_prefix=f"stage-{i}")
+                for i in range(len(self.stage_fns))]
         self._inflight: deque[_Group] = deque()
         self._occupancy = 0               # live (non-retired) tokens
         self._lock = threading.RLock()
+        self.closed = False
         self._stats = ExecutorStats(
             per_stage=[StageCounters() for _ in self.stage_fns])
 
@@ -232,6 +272,7 @@ class PipelineExecutor:
                       microbatch: int = 1,
                       pad_microbatches: bool = False,
                       buckets: Sequence[int] | None = None,
+                      profiler: Any = None, stage_workers: bool = False,
                       ) -> "PipelineExecutor":
         """Build from a :class:`repro.core.pipeline.BuiltPipeline`.
 
@@ -244,7 +285,8 @@ class PipelineExecutor:
         return cls(pipe.stage_fns, pipe.graph_inputs, pipe.graph_outputs,
                    max_in_flight=mif, microbatch=microbatch,
                    pad_microbatches=pad_microbatches, buckets=buckets,
-                   batched_fns=batched)
+                   batched_fns=batched, profiler=profiler,
+                   stage_workers=stage_workers)
 
     # -- public API ---------------------------------------------------------- #
     def submit(self, *args: Any) -> PendingToken:
@@ -300,16 +342,34 @@ class PipelineExecutor:
         """Compile the per-token and (if batching) vmapped stage
         executables for one example token, blocking until ready.  With
         bucketed padding every bucket size is warmed, so steady-state
-        serving never compiles for a ragged group again."""
-        self.submit(*args).result()
-        if self.microbatch > 1:
-            sizes = set(self.buckets or ()) | {self.microbatch}
-            for n in sorted(sizes):
-                if n <= 1:
-                    continue
-                for h in self.submit_many([args] * n):
-                    h.result()
+        serving never compiles for a ragged group again.  The attached
+        profiler (if any) is suspended so compile time never lands in the
+        profile and poisons the first re-plan decision."""
+        prof, self.profiler = self.profiler, None
+        try:
+            self.submit(*args).result()
+            if self.microbatch > 1:
+                sizes = set(self.buckets or ()) | {self.microbatch}
+                for n in sorted(sizes):
+                    if n <= 1:
+                        continue
+                    for h in self.submit_many([args] * n):
+                        h.result()
+        finally:
+            self.profiler = prof
         self.reset_stats()
+
+    def close(self) -> None:
+        """Drain in-flight work and shut down stage-worker threads.
+
+        Sets ``closed`` so caches (e.g. ElasticPlanner's) never hand a
+        shut-down executor back out.
+        """
+        self.drain()
+        self.closed = True
+        if self._pools is not None:
+            for p in self._pools:
+                p.shutdown(wait=True)
 
     def compile_count(self) -> int:
         """Executables compiled across per-token and vmapped stage fns.
@@ -434,11 +494,28 @@ class PipelineExecutor:
         try:
             fns = self._stage_fns_for(size + pad if stacked else 1)
             counters = []
-            for si, fn in enumerate(fns):
+            if self._pools is not None:
                 t0 = time.perf_counter()
-                env = fn(env)       # returns immediately (async dispatch)
-                counters.append((si, (time.perf_counter() - t0) * 1e3))
-            g.env = env
+                self._issue_threaded(g, env, fns)
+                enq = (time.perf_counter() - t0) * 1e3 / max(len(fns), 1)
+                counters = [(si, enq) for si in range(len(fns))]
+            else:
+                # async-dispatch issue; sampled groups pay a blocking
+                # barrier per stage so the profiler sees real wall times
+                sample = self.profiler is not None and self.profiler.tick()
+                for si, fn in enumerate(fns):
+                    t0 = time.perf_counter()
+                    env = fn(env)   # returns immediately (async dispatch)
+                    # issue_ms stays a pure dispatch metric: capture it
+                    # before any profiling barrier
+                    counters.append((si, (time.perf_counter() - t0) * 1e3))
+                    if sample:
+                        env = jax.block_until_ready(env)
+                        ms = (time.perf_counter() - t0) * 1e3
+                        self.profiler.record(si, ms)
+                        with self._lock:
+                            self._stats.per_stage[si].exec_ms += ms
+                g.env = env
         except BaseException as e:
             # unwind the reservation so the failed group neither blocks the
             # pool nor surfaces bogus results
@@ -463,6 +540,32 @@ class PipelineExecutor:
                 c.issue_ms += ms
         return [PendingToken(self, g, i) for i in range(size)]
 
+    def _issue_threaded(self, g: _Group, env: dict,
+                        fns: Sequence[Callable]) -> None:
+        """Chain the group's stages across the serial per-stage workers.
+
+        Stage ``s``'s task waits on stage ``s-1``'s future, runs the stage
+        to completion (blocking on its device work), and returns the next
+        env.  Submission order per pool preserves per-stage token order.
+        """
+        prev: Future | None = None
+        for si, (fn, pool) in enumerate(zip(fns, self._pools)):
+            prev = pool.submit(self._run_stage, fn, si,
+                               env if prev is None else None, prev)
+        g.future = prev
+
+    def _run_stage(self, fn: Callable, si: int, env0: dict | None,
+                   prev: Future | None) -> dict:
+        env = env0 if prev is None else prev.result()
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(env))
+        ms = (time.perf_counter() - t0) * 1e3
+        if self.profiler is not None:
+            self.profiler.record(si, ms)
+        with self._lock:
+            self._stats.per_stage[si].exec_ms += ms
+        return out
+
     def _retire_through(self, group: _Group) -> None:
         """Finalize ``group`` and everything older (in-order retirement)."""
         while not group.done:
@@ -483,16 +586,26 @@ class PipelineExecutor:
         finalized_here = False
         with g.lock:
             if not g.done:
-                out = self._out_of(g.env)
-                jax.block_until_ready(out)
-                if g.stacked:
-                    if isinstance(out, tuple):
-                        g.results = [tuple(o[i] for o in out)
-                                     for i in range(g.size)]
+                try:
+                    if g.future is not None:      # threaded stage workers
+                        g.env = g.future.result()
+                    out = self._out_of(g.env)
+                    jax.block_until_ready(out)
+                    if g.stacked:
+                        if isinstance(out, tuple):
+                            g.results = [tuple(o[i] for o in out)
+                                         for i in range(g.size)]
+                        else:
+                            g.results = [out[i] for i in range(g.size)]
                     else:
-                        g.results = [out[i] for i in range(g.size)]
-                else:
-                    g.results = [out]
+                        g.results = [out]
+                except BaseException as e:
+                    # an execute-time failure (threaded stage, or a runtime
+                    # error surfacing at the blocking wait): the group still
+                    # leaves the pipeline — it counts as retired so
+                    # issued == retired holds and the pool slot is freed —
+                    # and every PendingToken.result() re-raises the error.
+                    g.error = e
                 g.done = True
                 finalized_here = True
         with self._lock:

@@ -69,6 +69,10 @@ class Node:
     outputs: list[str] = field(default_factory=list)   # Value names
     params: dict[str, Any] = field(default_factory=dict)  # static call params
     time_ms: float | None = None           # profiled processing time
+    # provenance of time_ms: "estimate" (roofline/synthesis-report analog,
+    # may be overwritten by better sources) or "profile" (measured online by
+    # StageProfiler — supersedes estimates and is never overwritten by one).
+    time_source: str = "estimate"
     t_start: float | None = None           # absolute start (profile log)
     t_end: float | None = None             # absolute end   (profile log)
     flops: float | None = None             # analytical cost-model annotations

@@ -34,7 +34,7 @@ from .ir import CourierIR, Node
 __all__ = [
     "StagePlan", "PipelinePlan",
     "partition_paper", "partition_optimal", "fuse_adjacent_hw",
-    "fused_working_set_bytes", "make_model_fused_cost",
+    "fused_working_set_bytes", "make_model_fused_cost", "split_fused_node",
 ]
 
 
@@ -218,6 +218,23 @@ def partition_optimal(ir: CourierIR, max_stages: int | None = None,
 # --------------------------------------------------------------------------- #
 # Fusion pass — #pragma HLS dataflow analog, now cost-model driven
 # --------------------------------------------------------------------------- #
+def _clone_ir_shell(ir: CourierIR, name: str) -> CourierIR:
+    """Copy an IR's values (links cleared) and graph I/O, but no nodes.
+
+    The rebuild idiom shared by :func:`fuse_adjacent_hw` and
+    :func:`split_fused_node`: producer/consumer links are re-derived by
+    ``add_node`` as the caller adds its new node list.
+    """
+    out = CourierIR(name)
+    out.values = {k: type(v)(**{**v.__dict__, "consumers": [],
+                                "producer": None})
+                  for k, v in ir.values.items()}
+    out.graph_inputs = list(ir.graph_inputs)
+    out.graph_outputs = list(ir.graph_outputs)
+    return out
+
+
+
 def fused_working_set_bytes(ir: CourierIR, run: Sequence[Node], *,
                             row_block: int = 8, halo_rows: int = 4,
                             itemsize: int = 4) -> int:
@@ -277,6 +294,57 @@ def make_model_fused_cost(ir: CourierIR, *, vmem_bytes: int = VMEM_BYTES,
     return estimate
 
 
+def split_fused_node(ir: CourierIR, name: str,
+                     part_times_ms: Sequence[float] | None = None) -> CourierIR:
+    """Undo one fusion: replace a fused node with its original parts.
+
+    The inverse of :func:`fuse_adjacent_hw` for a single node, used by the
+    profile-guided re-planner when the *measured* time of a fused kernel
+    contradicts the model that justified fusing (the estimate said the
+    mega-kernel wins; the profile says it became the bottleneck — the exact
+    situation the paper hit with its fused cvtColor+cornerHarris HLS
+    module, discovered online here instead of at synthesis time).
+
+    Part nodes are reconstructed from the routing metadata recorded at
+    fusion time (``fused_part_inputs/outputs``, ``fused_params``).
+    ``part_times_ms`` sets the parts' processing times; by default the
+    fused node's time is split evenly (callers with a cost model can
+    re-annotate afterwards).  Returns a new IR; the input is not mutated.
+    """
+    node = ir.node(name)
+    if not node.fused_from:
+        raise ValueError(f"{name!r} is not a fused node")
+    if not node.fused_part_inputs or not node.fused_part_outputs:
+        raise ValueError(f"{name!r} carries no per-part routing metadata; "
+                         "only nodes built by fuse_adjacent_hw can be split")
+    keys = node.fn_key.split("+")
+    n_parts = len(node.fused_from)
+    if part_times_ms is None:
+        t = (node.time_ms or 0.0) / n_parts
+        part_times_ms = [t] * n_parts
+    if len(part_times_ms) != n_parts:
+        raise ValueError(f"need {n_parts} part times, got {len(part_times_ms)}")
+    parts = []
+    for i, pname in enumerate(node.fused_from):
+        params = dict(node.fused_params[i]) if node.fused_params else {}
+        parts.append(Node(
+            name=pname, fn_key=keys[i],
+            inputs=list(node.fused_part_inputs[i]),
+            outputs=list(node.fused_part_outputs[i]),
+            params=params, time_ms=float(part_times_ms[i]),
+            time_source=node.time_source))
+
+    out = _clone_ir_shell(ir, ir.name + "+defused")
+    for n in ir.nodes:
+        if n.name == name:
+            for p in parts:
+                out.add_node(p)
+        else:
+            out.add_node(n)
+    out.validate()
+    return out
+
+
 def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
                      fused_cost_ms: Callable[[list[Node]], float]
                      | str | None = None,
@@ -306,11 +374,7 @@ def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
         return ir
     if fused_cost_ms == "model":
         fused_cost_ms = make_model_fused_cost(ir, vmem_bytes=vmem_bytes)
-    out = CourierIR(ir.name + "+fused")
-    out.values = {k: type(v)(**{**v.__dict__, "consumers": list(v.consumers)})
-                  for k, v in ir.values.items()}
-    out.graph_inputs = list(ir.graph_inputs)
-    out.graph_outputs = list(ir.graph_outputs)
+    out = _clone_ir_shell(ir, ir.name + "+fused")
 
     def hw(n: Node) -> bool:
         e = db.lookup(n.fn_key)
@@ -371,11 +435,7 @@ def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
         new_nodes.append(run[0])
         i += 1
 
-    # Rebuild value producer/consumer links against the new node list.
-    for v in out.values.values():
-        v.consumers = []
-        v.producer = None
-    out.nodes = []
+    # value producer/consumer links re-derive from the new node list
     for n in new_nodes:
         out.add_node(n)
     out.validate()

@@ -59,6 +59,9 @@ def assign_placements(ir: CourierIR, db: ModuleDatabase,
     Marks each node "hw"/"sw" and, for hw nodes with a cost estimator,
     replaces the measured software time with the estimated accelerated time
     (the paper mixes measured SW times with synthesis-estimated HW times).
+    Nodes whose ``time_ms`` came from the *online* profile
+    (``time_source == "profile"``) keep it — a measurement of the deployed
+    hw module outranks the synthesis-report estimate it superseded.
     """
     for n in ir.nodes:
         e = db.lookup(n.fn_key)
@@ -69,7 +72,8 @@ def assign_placements(ir: CourierIR, db: ModuleDatabase,
                 dtypes = [ir.values[i].dtype for i in n.inputs]
                 c = e.cost_hw(shapes, dtypes, n.params)
                 n.flops, n.bytes_rw = c.flops, c.bytes_rw
-                n.time_ms = c.time_ms()
+                if n.time_source != "profile":
+                    n.time_ms = c.time_ms()
         else:
             n.placement = "sw"
 
@@ -236,20 +240,40 @@ class StageFn:
 
 
 def make_stage_fns(ir: CourierIR, db: ModuleDatabase, plan: PipelinePlan,
-                   jit: bool = True, donate: bool = True) -> list[StageFn]:
+                   jit: bool = True, donate: bool = True,
+                   cache: dict | None = None) -> list[StageFn]:
     """One callable per stage: dict(live-in) -> dict(live-out).
 
     ``donate``: donate each stage's env buffers when the live-in boundary
     consists purely of pipeline-owned intermediates (never stage 0, whose
     env aliases caller-owned token arrays, and never a boundary where a
     graph input is still live).
+
+    ``cache``: optional dict carried across re-plans (owned by e.g.
+    :class:`~repro.runtime.driver.ElasticPlanner`).  A stage whose identity
+    — node names, placements, live-in/out boundaries, jit/donate config —
+    is unchanged from a previous plan reuses the *same* :class:`StageFn`
+    object, so its compiled executables survive the re-plan: hot-swapping
+    a re-balanced executor recompiles only the stages whose boundaries
+    actually moved.
     """
     boundaries = _liveness(ir, plan)
     fns: list[StageFn] = []
     for k, s in enumerate(plan.stages):
         nodes = [ir.node(nn) for nn in s.node_names]
-        impls = [_resolve_impl(n, ir, db) for n in nodes]
         live_out = boundaries[k + 1]
+        can_donate = (donate and jit and k > 0
+                      and not set(boundaries[k]) & set(ir.graph_inputs))
+        # key on the nodes' CURRENT placements (what _resolve_impl reads),
+        # not the plan's snapshot — a plan computed before assign_placements
+        # would otherwise never hit the cache
+        key = (tuple(s.node_names),
+               tuple(n.placement for n in nodes),
+               tuple(boundaries[k]), tuple(live_out), jit, can_donate)
+        if cache is not None and key in cache:
+            fns.append(cache[key])
+            continue
+        impls = [_resolve_impl(n, ir, db) for n in nodes]
 
         def stage(env: dict, _nodes=tuple(nodes), _impls=tuple(impls),
                   _live=tuple(live_out)):
@@ -262,9 +286,10 @@ def make_stage_fns(ir: CourierIR, db: ModuleDatabase, plan: PipelinePlan,
                     env[name] = o
             return {k2: env[k2] for k2 in _live}
 
-        can_donate = (donate and jit and k > 0
-                      and not set(boundaries[k]) & set(ir.graph_inputs))
-        fns.append(StageFn(stage, jit=jit, donate=can_donate))
+        sf = StageFn(stage, jit=jit, donate=can_donate)
+        if cache is not None:
+            cache[key] = sf
+        fns.append(sf)
     return fns
 
 
@@ -334,17 +359,22 @@ class BuiltPipeline:
                  microbatch: int = 1,
                  pad_microbatches: bool = False,
                  buckets: "Sequence[int] | None" = None,
+                 profiler: Any = None, stage_workers: bool = False,
                  ) -> "PipelineExecutor":
         """Build a :class:`~repro.core.executor.PipelineExecutor` over the
         compiled stages (bounded token pool, eager async issue, optional
         per-stage micro-batching with bucketed ragged-group padding).
         ``max_in_flight`` defaults to this pipeline's own setting; the
         executor validates it (>= 1).  Executors built here share this
-        pipeline's compiled (and vmapped) stage executables."""
+        pipeline's compiled (and vmapped) stage executables.  ``profiler``
+        attaches a :class:`~repro.core.profiler.StageProfiler` for online
+        per-stage times; ``stage_workers`` runs stages on dedicated
+        threads (host-bound pipelines)."""
         from .executor import PipelineExecutor
         return PipelineExecutor.from_pipeline(
             self, max_in_flight=max_in_flight, microbatch=microbatch,
-            pad_microbatches=pad_microbatches, buckets=buckets)
+            pad_microbatches=pad_microbatches, buckets=buckets,
+            profiler=profiler, stage_workers=stage_workers)
 
     def run_async(self, tokens: Iterable[tuple | Any], *,
                   max_in_flight: int | None = None,

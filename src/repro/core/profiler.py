@@ -1,0 +1,207 @@
+"""Online stage profiler — the Frontend's runtime profile, kept live.
+
+Courier-FPGA "gathers runtime information of library functions from a
+running target binary" and feeds those *measured* times to the Pipeline
+Generator.  The seed reproduction only did that once, at trace time; this
+module keeps the measurement loop running while the pipeline serves
+traffic, so the planner can re-balance when reality drifts from the model
+(a stage slows down, a fused kernel underperforms its roofline, the host
+gets noisy neighbors).
+
+:class:`StageProfiler` is attached to a
+:class:`~repro.core.executor.PipelineExecutor` and fed per-stage wall times
+from its issue/retire hooks:
+
+* **threaded stage-worker mode** times every stage invocation exactly (each
+  stage runs to completion inside its own worker);
+* **async-dispatch mode** samples: every ``sample_every``-th token group is
+  issued with a blocking barrier after each stage, so steady-state traffic
+  pays the measurement cost only at the sampling rate.
+
+Per stage it maintains an **EMA** (fast trend signal) and a bounded
+**percentile window** (robust location — the median is what re-planning
+uses, so a single straggler sample can't trigger a spurious re-plan).
+
+:meth:`apply_to_ir` closes the loop: measured stage times are written back
+into the IR's per-node ``time_ms`` (attributed proportionally to the nodes'
+prior estimates), marked ``time_source="profile"`` so they *supersede*
+roofline estimates everywhere downstream (``assign_placements`` will not
+overwrite a profiled time with a synthesis-report estimate).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from .ir import CourierIR
+    from .partition import PipelinePlan
+
+__all__ = ["StageProfiler"]
+
+
+class StageProfiler:
+    """Low-overhead per-stage wall-time profile (EMA + percentile window).
+
+    Parameters
+    ----------
+    n_stages:
+        Number of pipeline stages to track.
+    alpha:
+        EMA smoothing factor (weight of the newest sample).
+    window:
+        Bounded sample window per stage; percentiles/medians are computed
+        over it, so the memory cost is ``n_stages * window`` floats.
+    sample_every:
+        In async-dispatch mode, profile every ``sample_every``-th token
+        group (1 = every group).  A sampled group is issued with a
+        blocking barrier per stage — i.e. it loses its async overlap — so
+        the default keeps sampling sparse (1 in 8); lower it only for
+        pipelines whose stages are host-bound anyway.  Threaded stage
+        workers ignore this — their timing is free.
+    min_samples:
+        Minimum per-stage samples before :meth:`measured_ms` (and hence
+        re-planning) trusts the window.
+    """
+
+    def __init__(self, n_stages: int, *, alpha: float = 0.25,
+                 window: int = 64, sample_every: int = 8,
+                 min_samples: int = 4):
+        if n_stages < 1:
+            raise ValueError(f"n_stages must be >= 1 (got {n_stages})")
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1] (got {alpha})")
+        if window < 1:
+            raise ValueError(f"window must be >= 1 (got {window})")
+        if sample_every < 1:
+            raise ValueError(f"sample_every must be >= 1 (got {sample_every})")
+        self.n_stages = n_stages
+        self.alpha = float(alpha)
+        self.window = int(window)
+        self.sample_every = int(sample_every)
+        self.min_samples = int(min_samples)
+        self._ema: list[float | None] = [None] * n_stages
+        self._win: list[deque] = [deque(maxlen=window) for _ in range(n_stages)]
+        self._count = [0] * n_stages
+        self._ticks = 0
+        self._lock = threading.Lock()
+
+    def clone_for(self, n_stages: int) -> "StageProfiler":
+        """Fresh profiler with the same knobs for a re-planned stage count."""
+        return StageProfiler(n_stages, alpha=self.alpha, window=self.window,
+                             sample_every=self.sample_every,
+                             min_samples=self.min_samples)
+
+    # -- executor-side hooks -------------------------------------------------- #
+    def tick(self) -> bool:
+        """Admission-side sampling gate: True every ``sample_every``-th call."""
+        with self._lock:
+            t = self._ticks
+            self._ticks += 1
+        return t % self.sample_every == 0
+
+    def record(self, stage: int, ms: float) -> None:
+        """Record one measured wall time (ms) for ``stage``."""
+        if not 0 <= stage < self.n_stages:
+            raise IndexError(f"stage {stage} out of range [0, {self.n_stages})")
+        ms = float(ms)
+        with self._lock:
+            prev = self._ema[stage]
+            self._ema[stage] = ms if prev is None \
+                else (1.0 - self.alpha) * prev + self.alpha * ms
+            self._win[stage].append(ms)
+            self._count[stage] += 1
+
+    # -- queries --------------------------------------------------------------- #
+    def samples(self, stage: int) -> int:
+        with self._lock:
+            return self._count[stage]
+
+    def ema_ms(self, stage: int) -> float | None:
+        with self._lock:
+            return self._ema[stage]
+
+    def percentile_ms(self, stage: int, q: float = 50.0) -> float | None:
+        with self._lock:
+            win = list(self._win[stage])
+        if not win:
+            return None
+        return float(np.percentile(np.asarray(win, dtype=np.float64), q))
+
+    def measured_ms(self, stage: int) -> float | None:
+        """Robust per-stage location: the window median, once ``min_samples``
+        samples exist.  Medians (not EMAs) drive re-planning so one
+        straggler sample cannot flip a plan."""
+        if self.samples(stage) < self.min_samples:
+            return None
+        return self.percentile_ms(stage, 50.0)
+
+    @property
+    def ready(self) -> bool:
+        """True once every stage has ``min_samples`` measurements."""
+        return all(self._count[k] >= self.min_samples
+                   for k in range(self.n_stages))
+
+    def snapshot(self) -> dict:
+        """Machine-readable per-stage profile (for stats endpoints)."""
+        stages = []
+        for k in range(self.n_stages):
+            stages.append({
+                "samples": self.samples(k),
+                "ema_ms": _round(self.ema_ms(k)),
+                "p50_ms": _round(self.percentile_ms(k, 50.0)),
+                "p90_ms": _round(self.percentile_ms(k, 90.0)),
+            })
+        return {"n_stages": self.n_stages, "sample_every": self.sample_every,
+                "window": self.window, "per_stage": stages}
+
+    def reset(self) -> None:
+        with self._lock:
+            self._ema = [None] * self.n_stages
+            self._win = [deque(maxlen=self.window)
+                         for _ in range(self.n_stages)]
+            self._count = [0] * self.n_stages
+            self._ticks = 0
+
+    # -- cost-model write-back -------------------------------------------------- #
+    def apply_to_ir(self, ir: "CourierIR", plan: "PipelinePlan", *,
+                    min_samples: int | None = None) -> dict[str, float]:
+        """Write measured stage times back into the IR as per-node costs.
+
+        For every stage with a trusted measurement, the stage's wall time is
+        attributed to its nodes proportionally to their *prior* ``time_ms``
+        (uniformly when no priors exist), and each updated node is marked
+        ``time_source="profile"`` so downstream estimators never overwrite
+        the measurement with a model.  Returns ``{node_name: previous
+        time_ms}`` for every node updated (the planner uses it to detect
+        measured-vs-model contradictions).
+        """
+        need = self.min_samples if min_samples is None else min_samples
+        replaced: dict[str, float] = {}
+        for k, s in enumerate(plan.stages):
+            if k >= self.n_stages or self.samples(k) < need:
+                continue
+            m = self.percentile_ms(k, 50.0)
+            if m is None:
+                continue
+            nodes = [ir.node(nn) for nn in s.node_names]
+            priors = [n.time_ms for n in nodes]
+            # proportional attribution needs a full, positive prior vector;
+            # otherwise fall back to uniform — attributing 0 ms to a
+            # None-prior node would pin it as a "measured" free node that
+            # no estimator may ever correct
+            total = sum(p for p in priors if p is not None)
+            proportional = all(p is not None for p in priors) and total > 0
+            for n, prior in zip(nodes, priors):
+                share = (prior / total) if proportional else 1.0 / len(nodes)
+                replaced[n.name] = prior if prior is not None else 0.0
+                n.time_ms = m * share
+                n.time_source = "profile"
+        return replaced
+
+
+def _round(x: float | None, nd: int = 4) -> float | None:
+    return None if x is None else round(float(x), nd)

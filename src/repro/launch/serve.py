@@ -75,7 +75,15 @@ class Request:
 
 
 def _percentile(xs: list[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+    """Percentile over finite samples only; 0.0 for empty/tiny windows.
+
+    Latency windows can be tiny (a 1-request batch right after startup) or
+    carry non-finite entries (a timed-out clock pair); filtering here keeps
+    the stats endpoint NaN-free instead of poisoning dashboards.
+    """
+    arr = np.asarray([x for x in xs if x is not None], dtype=np.float64)
+    arr = arr[np.isfinite(arr)]
+    return float(np.percentile(arr, q)) if arr.size else 0.0
 
 
 class RequestQueueServer:
@@ -109,6 +117,10 @@ class RequestQueueServer:
         self._done: list[Request] = []
         self._batch_sizes: list[int] = []
         self._lock = threading.Lock()
+        # zero-downtime executor hot-swap (see swap_executor)
+        self._swap_lock = threading.Lock()
+        self._pending_swap: tuple[PipelineExecutor, threading.Event] | None = None
+        self.swaps = 0
 
     # -- lifecycle ----------------------------------------------------------- #
     def start(self) -> "RequestQueueServer":
@@ -141,6 +153,68 @@ class RequestQueueServer:
         self.queue.put(r)
         return r
 
+    def swap_executor(self, new_executor: PipelineExecutor, *,
+                      warm_args: tuple | None = None,
+                      timeout: float = 120.0) -> PipelineExecutor:
+        """Zero-downtime executor hot-swap (the adaptive re-plan deploy).
+
+        Sequence (documented in EXPERIMENTS.md):
+
+        1. **Warm off-path** — when ``warm_args`` is given, the new
+           executor's ``warmup`` compiles every bucket shape *before* it
+           sees traffic, so the swap never pays a compile on the serving
+           path (and pays **zero** when the rebuilt executor reuses the
+           old plan's StageFn/vmapped executables).
+        2. **Swap at a batch boundary** — the batcher thread installs the
+           new executor between batches, so no batch is ever split across
+           executors.
+        3. **Drain in flight** — batches already issued keep their
+           ``PendingToken`` handles into the *old* executor; the retire
+           thread resolves them as usual.  Nothing is cancelled, no
+           request is dropped, and completion order per request is
+           unchanged.
+
+        Blocks until the batcher performed the swap (immediately when the
+        server is not running) and returns the old executor — the caller
+        may ``drain()``/``close()`` it once its stats are harvested.
+        """
+        if warm_args is not None:
+            new_executor.warmup(*warm_args)
+        done = threading.Event()
+        with self._swap_lock:
+            if self._pending_swap is not None:
+                raise RuntimeError("another executor swap is in progress")
+            # capture BEFORE publishing: once the pending swap is visible a
+            # fast batcher may install new_executor at any moment, and
+            # self.executor would then be the new one
+            old = self.executor
+            self._pending_swap = (new_executor, done)
+        if not self._running:             # no batcher: swap synchronously
+            self._maybe_swap()
+        elif not done.wait(timeout):
+            # withdraw the offer so a stalled batcher can't install a
+            # swap the caller already gave up on (and so future swaps
+            # aren't blocked forever); if the batcher took it in this
+            # instant, the swap DID happen and the timeout is moot
+            with self._swap_lock:
+                if self._pending_swap is not None \
+                        and self._pending_swap[1] is done:
+                    self._pending_swap = None
+                    raise TimeoutError(
+                        "executor swap not performed within timeout")
+        return old
+
+    def _maybe_swap(self) -> None:
+        """Install a pending executor; called between batches (batcher)."""
+        with self._swap_lock:
+            pend, self._pending_swap = self._pending_swap, None
+        if pend is None:
+            return
+        new_ex, done = pend
+        self.executor = new_ex
+        self.swaps += 1
+        done.set()
+
     def stats(self) -> dict:
         """Per-request latency summary + executor throughput counters."""
         with self._lock:         # one snapshot: latencies, sizes, span agree
@@ -165,7 +239,11 @@ class RequestQueueServer:
                 "max": max(lat) if lat else 0.0,
             },
             "queue_ms_mean": float(np.mean(queue_ms)) if queue_ms else 0.0,
+            "swaps": self.swaps,
             "executor": self.executor.stats().as_dict(),
+            "profile": (self.executor.profiler.snapshot()
+                        if getattr(self.executor, "profiler", None) is not None
+                        else None),
         }
 
     # -- server threads ------------------------------------------------------ #
@@ -188,6 +266,7 @@ class RequestQueueServer:
 
     def _batch_loop(self) -> None:
         while self._running or not self.queue.empty():
+            self._maybe_swap()            # executor swaps at batch boundaries
             batch = self._collect_batch()
             if not batch:
                 continue
@@ -219,6 +298,7 @@ class RequestQueueServer:
                 self._batch_sizes.append(len(batch))
             for r, h in zip(batch, handles):
                 self._issued.put((r, h))
+        self._maybe_swap()                # never leave a swap waiter hanging
 
     def _retire_loop(self) -> None:
         while True:

@@ -1,5 +1,5 @@
-from .driver import (ElasticPlanner, FaultTolerantDriver, StragglerMonitor,
-                     TrainResult)
+from .driver import (ElasticPlanner, FaultTolerantDriver, ReplanDecision,
+                     StragglerMonitor, TrainResult)
 
-__all__ = ["ElasticPlanner", "FaultTolerantDriver", "StragglerMonitor",
-           "TrainResult"]
+__all__ = ["ElasticPlanner", "FaultTolerantDriver", "ReplanDecision",
+           "StragglerMonitor", "TrainResult"]

@@ -54,22 +54,76 @@ class StragglerMonitor:
 
 
 # --------------------------------------------------------------------------- #
-# Elastic re-planning (Courier re-balance on resource change)
+# Elastic re-planning (Courier re-balance on resource change OR profile drift)
 # --------------------------------------------------------------------------- #
+@dataclass
+class ReplanDecision:
+    """Outcome of one :meth:`ElasticPlanner.replan_from_profile` check."""
+
+    replanned: bool
+    reason: str
+    old_bottleneck_ms: float          # measured bottleneck of the old plan
+    new_bottleneck_ms: float          # predicted bottleneck of the new plan
+    gain: float                       # old / new (1.0 when not replanned)
+    defused: list[str] = field(default_factory=list)   # fused nodes split
+    plan: Any = None                  # new PipelinePlan (None if unchanged)
+    executor: Any = None              # new executor (None if unchanged)
+
+    def describe(self) -> str:
+        verdict = "REPLAN" if self.replanned else "keep"
+        return (f"[{verdict}] {self.reason}: measured bottleneck "
+                f"{self.old_bottleneck_ms:.3f} ms -> predicted "
+                f"{self.new_bottleneck_ms:.3f} ms ({self.gain:.2f}x)"
+                + (f", defused {self.defused}" if self.defused else ""))
+
+
 class ElasticPlanner:
-    """Re-balance pipeline stage boundaries when the stage count changes.
+    """Re-balance pipeline stage boundaries when the stage count changes —
+    or when the *online profile* contradicts the cost table the current
+    plan was balanced on.
 
     ``db`` (optional) enables the executor path: the planner can then turn
     a re-balanced plan into compiled stage functions and a running
     :class:`~repro.core.executor.PipelineExecutor`, caching the current
-    executor keyed by its stage boundaries.
+    executor keyed by its stage boundaries.  A persistent ``StageFn`` cache
+    (shared across every plan this planner builds) keeps the compiled
+    executables of stages whose boundaries didn't move, so a profile-driven
+    re-plan recompiles only the stages that actually changed.
+
+    Re-plan policy knobs (hysteresis — no flapping under noisy timings):
+
+    * ``min_gain`` — a new plan must beat the measured bottleneck by this
+      factor before the executor is rebuilt (default 1.15);
+    * ``margin`` — measured-vs-model contradiction factor that triggers a
+      fuse/no-fuse revisit (default
+      :data:`repro.core.costmodel.PROFILE_MARGIN`);
+    * ``min_samples`` — per-stage sample floor before the profile is
+      trusted at all (also enforced by the profiler's window median, which
+      is itself robust to stragglers).
     """
 
-    def __init__(self, layer_ir: CourierIR, db: Any = None):
+    def __init__(self, layer_ir: CourierIR, db: Any = None, *,
+                 min_gain: float = 1.15, margin: float | None = None,
+                 min_samples: int = 4):
+        from repro.core.costmodel import PROFILE_MARGIN
+
         self.layer_ir = layer_ir
         self.db = db
-        self._cached: tuple[tuple[int, ...], Any] | None = None
+        self.min_gain = float(min_gain)
+        self.margin = PROFILE_MARGIN if margin is None else float(margin)
+        self.min_samples = int(min_samples)
+        self._cached: tuple[tuple, Any] | None = None
+        self._current_plan: PipelinePlan | None = None
+        self._stagefn_cache: dict = {}    # stage identity -> StageFn (reuse)
+        # first-seen MODEL times per node, captured before any profile
+        # write-back: the fusion-revisit contradiction check compares
+        # measurements against the model, not against older measurements
+        # (which would let gradual drift creep under the margin forever)
+        self._model_ms: dict[str, float] = {}
         self.rebuilds = 0                 # executor recompiles (observability)
+        self.replans = 0                  # profile-driven plan changes
+        self.replan_checks = 0            # replan_from_profile invocations
+        self.last_decision: ReplanDecision | None = None
 
     def plan(self, n_stages: int) -> PipelinePlan:
         return partition_optimal(self.layer_ir, max_stages=n_stages)
@@ -82,8 +136,32 @@ class ElasticPlanner:
             i += len(s.node_names)
         return bounds
 
+    @property
+    def current_plan(self) -> PipelinePlan | None:
+        return self._current_plan
+
+    def stagefns_cached(self) -> int:
+        """Size of the cross-plan StageFn cache (observability)."""
+        return len(self._stagefn_cache)
+
+    def _build_executor(self, plan: PipelinePlan, *, max_in_flight, microbatch,
+                        jit, profiler=None, stage_workers=False) -> Any:
+        from repro.core.executor import PipelineExecutor
+        from repro.core.pipeline import assign_placements, make_stage_fns
+
+        assign_placements(self.layer_ir, self.db)
+        fns = make_stage_fns(self.layer_ir, self.db, plan, jit=jit,
+                             cache=self._stagefn_cache)
+        return PipelineExecutor(fns, self.layer_ir.graph_inputs,
+                                self.layer_ir.graph_outputs,
+                                max_in_flight=max_in_flight,
+                                microbatch=microbatch, profiler=profiler,
+                                stage_workers=stage_workers)
+
     def executor_for(self, n_stages: int, *, max_in_flight: int | None = None,
-                     microbatch: int = 1, jit: bool = True) -> tuple[Any, bool]:
+                     microbatch: int = 1, jit: bool = True,
+                     profiler: Any = None,
+                     stage_workers: bool = False) -> tuple[Any, bool]:
         """(executor, rebuilt) for a resource count of ``n_stages``.
 
         Re-partitions the IR for the new stage count; when the resulting
@@ -96,23 +174,153 @@ class ElasticPlanner:
         if self.db is None:
             raise ValueError("ElasticPlanner needs a ModuleDatabase to build "
                              "executors; pass db= at construction")
-        from repro.core.executor import PipelineExecutor
-        from repro.core.pipeline import assign_placements, make_stage_fns
-
         plan = self.plan(n_stages)
         key = (tuple(len(s.node_names) for s in plan.stages),
-               max_in_flight, microbatch, jit)
-        if self._cached is not None and self._cached[0] == key:
+               max_in_flight, microbatch, jit, stage_workers, id(profiler))
+        if self._cached is not None and self._cached[0] == key \
+                and not getattr(self._cached[1], "closed", False):
             return self._cached[1], False
-        assign_placements(self.layer_ir, self.db)
-        fns = make_stage_fns(self.layer_ir, self.db, plan, jit=jit)
-        ex = PipelineExecutor(fns, self.layer_ir.graph_inputs,
-                              self.layer_ir.graph_outputs,
-                              max_in_flight=max_in_flight,
-                              microbatch=microbatch)
+        ex = self._build_executor(plan, max_in_flight=max_in_flight,
+                                  microbatch=microbatch, jit=jit,
+                                  profiler=profiler,
+                                  stage_workers=stage_workers)
         self._cached = (key, ex)
+        self._current_plan = plan
         self.rebuilds += 1
         return ex, True
+
+    def replan_from_profile(self, profiler: Any, *,
+                            max_stages: int | None = None,
+                            max_in_flight: int | None = None,
+                            microbatch: int = 1, jit: bool = True,
+                            stage_workers: bool = False,
+                            min_gain: float | None = None,
+                            margin: float | None = None,
+                            min_samples: int | None = None,
+                            revisit_fusion: bool = True,
+                            new_profiler: Any = None) -> ReplanDecision:
+        """Profile-guided re-plan check: measured costs -> maybe new executor.
+
+        The decision rule (documented in EXPERIMENTS.md):
+
+        1. **Trust gate** — every current stage needs ``min_samples``
+           measurements; otherwise keep the plan ("insufficient profile").
+        2. **Write-back** — measured stage medians are attributed to nodes
+           (:meth:`StageProfiler.apply_to_ir`), superseding roofline
+           estimates (``time_source="profile"``).
+        3. **Fusion revisit** — a fused node whose measured time
+           contradicts its model by ``margin`` is split back into its
+           parts (:func:`~repro.core.partition.split_fused_node`), letting
+           the partitioner place them in separate stages.
+        4. **Re-balance** — ``partition_optimal`` over the measured costs
+           (``max_stages`` defaults to the current stage count).
+        5. **Hysteresis** — rebuild only when the predicted bottleneck
+           beats the *measured* bottleneck by ``min_gain`` AND the stage
+           boundaries actually changed; otherwise keep serving the current
+           executor.  Window medians + this threshold are what prevent
+           plan flapping under noisy timings.
+
+        The new executor shares the planner's StageFn cache, so stages with
+        unchanged boundaries keep their compiled executables (bounded
+        recompiles during the serving layer's hot-swap).
+        """
+        from repro.core.costmodel import measured_contradicts
+        from repro.core.partition import split_fused_node
+
+        if self.db is None:
+            raise ValueError("ElasticPlanner needs a ModuleDatabase to build "
+                             "executors; pass db= at construction")
+        if self._current_plan is None:
+            raise ValueError("no current plan: call executor_for() before "
+                             "replan_from_profile()")
+        min_gain = self.min_gain if min_gain is None else float(min_gain)
+        margin = self.margin if margin is None else float(margin)
+        min_samples = self.min_samples if min_samples is None \
+            else int(min_samples)
+        self.replan_checks += 1
+        plan = self._current_plan
+
+        def keep(reason: str, old_b: float, new_b: float | None = None,
+                 defused: list[str] | None = None) -> ReplanDecision:
+            d = ReplanDecision(False, reason, old_b, new_b or old_b,
+                               1.0 if not new_b else old_b / max(new_b, 1e-12),
+                               defused or [])
+            self.last_decision = d
+            return d
+
+        # 1) trust gate: the caller's (possibly lower) min_samples decides,
+        #    so query the window directly rather than measured_ms (which
+        #    enforces the profiler's own floor)
+        if plan.n_stages > profiler.n_stages or \
+                min(profiler.samples(k) for k in range(plan.n_stages)) \
+                < min_samples:
+            return keep("insufficient profile", 0.0)
+        measured = [profiler.percentile_ms(k, 50.0)
+                    for k in range(plan.n_stages)]
+        if any(m is None for m in measured):
+            return keep("insufficient profile", 0.0)
+        old_bottleneck = max(measured)
+
+        # 2) measured costs supersede the model (in-place: time_ms only,
+        #    so the current plan's node names stay valid either way).
+        #    Snapshot each node's model time FIRST — and only while it is
+        #    still a model ("profile" write-backs from earlier checks must
+        #    not become the baseline)
+        for n in self.layer_ir.nodes:
+            if n.time_source != "profile" and n.time_ms is not None:
+                self._model_ms.setdefault(n.name, n.time_ms)
+        model_ms = {n.name: self._model_ms.get(n.name, n.time_ms)
+                    for n in self.layer_ir.nodes}
+        profiler.apply_to_ir(self.layer_ir, plan, min_samples=min_samples)
+
+        # 3) fuse/no-fuse revisit under measured costs — STAGED on a local
+        #    IR and committed only if the re-plan is accepted; a defuse on
+        #    the keep path would orphan the current plan's fused stages
+        ir = self.layer_ir
+        defused: list[str] = []
+        if revisit_fusion:
+            for n in list(ir.nodes):
+                if n.fused_from and measured_contradicts(
+                        model_ms.get(n.name), n.time_ms, margin):
+                    ir = split_fused_node(ir, n.name)
+                    defused.append(n.name)
+
+        # 4) re-balance on measured costs
+        new_plan = partition_optimal(
+            ir,
+            max_stages=max_stages if max_stages is not None else plan.n_stages)
+
+        # 5) hysteresis
+        same_boundaries = (
+            not defused
+            and [s.node_names for s in new_plan.stages]
+            == [s.node_names for s in plan.stages])
+        if same_boundaries:
+            return keep("plan unchanged", old_bottleneck)
+        gain = old_bottleneck / max(new_plan.bottleneck_ms, 1e-12)
+        if gain < min_gain:
+            return keep(f"gain {gain:.2f}x below hysteresis threshold "
+                        f"{min_gain:.2f}x", old_bottleneck,
+                        new_plan.bottleneck_ms, defused)
+
+        prof = new_profiler
+        if prof is None and hasattr(profiler, "clone_for"):
+            prof = profiler.clone_for(new_plan.n_stages)
+        self.layer_ir = ir                # commit the (possibly defused) IR
+        ex = self._build_executor(plan=new_plan, max_in_flight=max_in_flight,
+                                  microbatch=microbatch, jit=jit,
+                                  profiler=prof, stage_workers=stage_workers)
+        key = (tuple(len(s.node_names) for s in new_plan.stages),
+               max_in_flight, microbatch, jit, stage_workers, id(prof))
+        self._cached = (key, ex)
+        self._current_plan = new_plan
+        self.rebuilds += 1
+        self.replans += 1
+        d = ReplanDecision(True, "measured costs re-balanced the plan",
+                           old_bottleneck, new_plan.bottleneck_ms, gain,
+                           defused, new_plan, ex)
+        self.last_decision = d
+        return d
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,124 @@
+"""Schema guard for the committed machine-readable benchmark artifact.
+
+``BENCH_pipeline.json`` is the perf trajectory tracked across PRs; if its
+keys or types drift silently, cross-PR comparisons quietly break.  The fast
+test validates the committed file against an explicit schema; the slow test
+runs the actual smoke benchmark (the same code path as ``benchmarks/run.py
+--smoke``) and asserts it emits a key-superset of the committed file.
+"""
+import json
+import numbers
+import os
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_PATH = os.path.join(ROOT, "BENCH_pipeline.json")
+
+# key -> type (dict = nested schema validated recursively; extra keys in the
+# file are allowed so ADDING metrics never breaks the guard, but the keys
+# below must exist with these types)
+NUM = numbers.Real
+SCHEMA = {
+    "bench": str,
+    "smoke": bool,
+    "shape": list,
+    "n_frames": int,
+    "tokens_per_sec": {
+        "sequential": NUM, "wavefront": NUM, "async": NUM, "fused": NUM,
+    },
+    "bottleneck_ms": {
+        "pipeline": NUM, "fused_pipeline": NUM, "unfused_pipeline": NUM,
+    },
+    "per_frame_ms": {
+        "sequential_ms": NUM, "staged_ms": NUM, "wavefront_ms": NUM,
+        "async_ms": NUM, "microbatch_ms": NUM,
+    },
+    "compile_count_steady": int,
+    "fusion": {
+        "harris_kernel": {"chain_ms": NUM, "fused_ms": NUM, "speedup": NUM},
+        "pipeline": {
+            "fused": {"bottleneck_ms": NUM, "tokens_per_sec": NUM,
+                      "n_stages": int, "compile_count": int},
+            "unfused": {"bottleneck_ms": NUM, "tokens_per_sec": NUM},
+            "speedup_fused_vs_unfused": NUM,
+        },
+        "roofline": {"traffic_reduction": NUM, "hbm_bytes_saved": NUM},
+    },
+    "replan": {
+        "sim": {
+            "tps_before_slowdown": NUM, "tps_static": NUM,
+            "tps_adaptive": NUM, "recovery": NUM, "replanned": bool,
+            "slowdown": NUM, "n_stages": int,
+        },
+        "hot_swap": {
+            "requests": int, "served": int, "dropped": int, "swaps": int,
+            "recompiles_after_warmup": int,
+        },
+    },
+}
+
+
+def _validate(obj, schema, path="$"):
+    problems = []
+    if not isinstance(obj, dict):
+        return [f"{path}: expected object, got {type(obj).__name__}"]
+    for key, want in schema.items():
+        if key not in obj:
+            problems.append(f"{path}.{key}: missing")
+            continue
+        val = obj[key]
+        if isinstance(want, dict):
+            problems.extend(_validate(val, want, f"{path}.{key}"))
+        elif want is NUM:
+            # bool is a Real subclass in Python; a bool here is a type drift
+            if isinstance(val, bool) or not isinstance(val, numbers.Real):
+                problems.append(f"{path}.{key}: expected number, "
+                                f"got {type(val).__name__}")
+        elif not isinstance(val, want):
+            problems.append(f"{path}.{key}: expected {want.__name__}, "
+                            f"got {type(val).__name__}")
+    return problems
+
+
+def _key_paths(obj, prefix="$"):
+    """All dict key paths in a nested JSON object (leaves and interior)."""
+    paths = set()
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            p = f"{prefix}.{k}"
+            paths.add(p)
+            paths.update(_key_paths(v, p))
+    return paths
+
+
+def test_committed_bench_json_matches_schema():
+    assert os.path.exists(BENCH_PATH), "BENCH_pipeline.json not committed"
+    with open(BENCH_PATH) as f:
+        data = json.load(f)
+    problems = _validate(data, SCHEMA)
+    assert not problems, "BENCH_pipeline.json drifted:\n  " + \
+        "\n  ".join(problems)
+    # sanity on the acceptance-critical numbers, not just their types
+    assert data["replan"]["sim"]["recovery"] >= 1.3
+    assert data["replan"]["hot_swap"]["dropped"] == 0
+    assert data["replan"]["hot_swap"]["recompiles_after_warmup"] == 0
+    assert data["tokens_per_sec"]["sequential"] > 0
+
+
+@pytest.mark.slow
+def test_smoke_benchmark_emits_superset_of_committed_keys(tmp_path):
+    """`benchmarks/run.py --smoke` writes a key-superset of the committed
+    artifact, so the smoke CI path exercises every committed metric."""
+    import sys
+    sys.path.insert(0, ROOT)              # benchmarks/ is a root package
+    from benchmarks.table1_pipeline import write_bench_json
+
+    with open(BENCH_PATH) as f:
+        committed = json.load(f)
+    out = write_bench_json(path=str(tmp_path / "bench.json"), smoke=True)
+    with open(out) as f:
+        smoke = json.load(f)
+    missing = _key_paths(committed) - _key_paths(smoke)
+    assert not missing, f"smoke payload lost keys: {sorted(missing)}"
+    assert not _validate(smoke, SCHEMA)

@@ -1,0 +1,150 @@
+"""Differential sweep: EVERY ModuleDatabase entry, hw vs the jnp reference.
+
+The Off-load Switcher's safety story rests on "the accelerated module
+computes the same function as the software fallback".  This harness
+enumerates *all* entries of every database the repo builds — including the
+``register_fused`` mega-kernels — and asserts hw/sw agreement over a
+shape/dtype grid that includes odd sizes and non-multiple-of-block rows.
+
+It is also a registration gate: an entry whose name has no input factory
+below FAILS the suite, so a future kernel cannot be registered without
+adding its differential coverage here.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.database import ModuleDatabase
+from repro.kernels.ops import register_rmsnorm_matmul_modules
+from repro.models.harris import make_harris_db
+
+
+# --------------------------------------------------------------------------- #
+# every database the repo constructs
+# --------------------------------------------------------------------------- #
+def _databases() -> dict[str, ModuleDatabase]:
+    rms = ModuleDatabase("rmsnorm-matmul")
+    register_rmsnorm_matmul_modules(rms)
+    return {"harris": make_harris_db(with_hw=True), "rmsnorm": rms}
+
+
+# image-plane grid: odd sizes and rows that are NOT multiples of the
+# kernels' row blocks (harris ROW_BLOCK=8, rmsnorm ROW_BLOCK=256)
+IMG_SHAPES = [(16, 32), (17, 23), (13, 40)]
+ROW_SHAPES = [(8, 32), (7, 16), (5, 130)]       # (rows, d) for rmsnorm/matmul
+DTYPES = [jnp.float32]
+ROW_DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _key(i: int) -> jax.Array:
+    return jax.random.PRNGKey(1234 + i)
+
+
+# entry name -> list of input tuples covering the grid
+def _img(i, h, w, c=None, dtype=jnp.float32):
+    shape = (h, w) if c is None else (h, w, c)
+    return (jax.random.uniform(_key(i), shape, dtype) * 255.0).astype(dtype)
+
+
+def _inputs_for(name: str) -> list[tuple]:
+    cases: list[tuple] = []
+    if name in ("cvtColor", "cvtColor+cornerHarris",
+                "cvtColor+cornerHarris+convertScaleAbs"):
+        for i, (h, w) in enumerate(IMG_SHAPES):
+            for dt in DTYPES:
+                cases.append((_img(i, h, w, 3, dt),))
+    elif name in ("cornerHarris", "normalize", "convertScaleAbs"):
+        for i, (h, w) in enumerate(IMG_SHAPES):
+            for dt in DTYPES:
+                cases.append((_img(i, h, w, None, dt),))
+    elif name == "rmsnorm":
+        for i, (n, d) in enumerate(ROW_SHAPES):
+            for dt in ROW_DTYPES:
+                x = jax.random.normal(_key(i), (n, d), jnp.float32).astype(dt)
+                s = jax.random.normal(_key(i + 50), (d,),
+                                      jnp.float32).astype(dt) * 0.1
+                cases.append((x, s))
+    elif name == "matmul":
+        for i, (n, d) in enumerate(ROW_SHAPES):
+            for dt in ROW_DTYPES:
+                x = jax.random.normal(_key(i), (n, d), jnp.float32).astype(dt)
+                w = jax.random.normal(_key(i + 60), (d, 24),
+                                      jnp.float32).astype(dt)
+                cases.append((x, w))
+    elif name == "rmsnorm+matmul":
+        for i, (n, d) in enumerate(ROW_SHAPES):
+            for dt in ROW_DTYPES:
+                x = jax.random.normal(_key(i), (n, d), jnp.float32).astype(dt)
+                s = jax.random.normal(_key(i + 50), (d,),
+                                      jnp.float32).astype(dt) * 0.1
+                w = jax.random.normal(_key(i + 60), (d, 24),
+                                      jnp.float32).astype(dt)
+                cases.append((x, s, w))
+    return cases
+
+
+# entries that legitimately have NO accelerated module (paper Table I:
+# normalize never got an HLS module); they are still enumerated so a future
+# hw registration immediately enters the differential sweep
+SW_ONLY_OK = {"normalize"}
+
+_ALL = [(db_name, entry_name)
+        for db_name, db in _databases().items()
+        for entry_name in db.names()]
+
+
+def _assert_close(name: str, got, want, dtype) -> None:
+    g = np.asarray(got, np.float64)
+    w = np.asarray(want, np.float64)
+    assert g.shape == w.shape, f"{name}: shape {g.shape} != {w.shape}"
+    # normalize by the reference's magnitude: Harris responses are O(1e9+)
+    # for uint8-range inputs, rmsnorm outputs O(1); one tolerance serves both
+    scale = max(1.0, float(np.max(np.abs(w))))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(g / scale, w / scale, atol=tol, rtol=tol,
+                               err_msg=f"{name}: hw diverged from reference")
+
+
+def test_every_entry_has_differential_coverage():
+    """Registration gate: a database entry without an input factory fails."""
+    for db_name, db in _databases().items():
+        for name in db.names():
+            assert _inputs_for(name), (
+                f"database {db_name!r} entry {name!r} has no differential "
+                "input factory — add one to tests/test_database_diff.py "
+                "before registering the kernel")
+
+
+@pytest.mark.parametrize("db_name,entry_name", _ALL)
+def test_hw_matches_reference_over_grid(db_name, entry_name):
+    db = _databases()[db_name]
+    e = db.lookup(entry_name)
+    assert e is not None
+    if e.accelerated is None:
+        assert entry_name in SW_ONLY_OK, (
+            f"{entry_name!r} has no accelerated impl and is not on the "
+            "known software-only list")
+        pytest.skip(f"{entry_name} is software-only (as in the paper)")
+    cases = _inputs_for(entry_name)
+    assert cases
+    checked = 0
+    for inputs in cases:
+        shapes = [jnp.shape(a) for a in inputs]
+        if not e.has_hw(*shapes):        # shape-gated: sw path serves these
+            continue
+        got = e.accelerated(*inputs)
+        want = e.software(*inputs)
+        _assert_close(f"{db_name}.{entry_name}{shapes}", got, want,
+                      inputs[0].dtype)
+        checked += 1
+    assert checked > 0, (f"{entry_name!r}: applicability gated out every "
+                         "grid point — widen the grid")
+
+
+def test_fused_entries_are_covered():
+    """The mega-kernels registered via register_fused are in the sweep."""
+    fused = [n for _, n in _ALL if "+" in n]
+    assert "cvtColor+cornerHarris" in fused
+    assert "cvtColor+cornerHarris+convertScaleAbs" in fused
+    assert "rmsnorm+matmul" in fused
