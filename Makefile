@@ -11,10 +11,10 @@ test:            ## full tier-1 suite (incl. slow markers)
 test-fast:       ## fast split (excludes @slow: subprocess/multi-device/soak tests)
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q -m "not slow"
 
-bench:           ## all paper tables + fusion + replan benchmarks; writes BENCH_pipeline.json
+bench:           ## all paper tables + fusion + replan + replicate benchmarks; writes BENCH_pipeline.json
 	PYTHONPATH=$(PYPATH) $(PY) benchmarks/run.py
 
-bench-smoke:     ## 2-token pipeline + fusion + adaptive-replan smoke benchmark
+bench-smoke:     ## 2-token pipeline + fusion + replan + replicate (stage replication) smoke benchmark
 	PYTHONPATH=$(PYPATH) $(PY) benchmarks/run.py --smoke
 
 ci: test-fast bench-smoke  ## single CI entry point: fast tests, then smoke benchmark

@@ -26,9 +26,10 @@ Feeds the ``replan`` section of ``BENCH_pipeline.json``.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
+
+from benchmarks.simchain import DELAYS_MS as _DELAYS_MS
+from benchmarks.simchain import make_planner, tps as _tps
 
 # --------------------------------------------------------------------------- #
 # 1. simulated drift: sleep-backed stages with a runtime knob
@@ -38,37 +39,6 @@ BASE_MS = 2.0
 SLOWDOWN = 3.0
 SLOWED_STAGE = 1            # middle stage of the initial 3-stage plan
 
-# per-function processing-time knob, read at CALL time (the drift injector)
-_DELAYS_MS: dict[str, float] = {}
-
-
-def _make_impl(key: str):
-    def sw(x):
-        time.sleep(_DELAYS_MS[key] / 1e3)
-        return np.asarray(x) + 1.0
-    sw.__name__ = key
-    return sw
-
-
-def _make_sim(n_nodes: int = N_NODES, base_ms: float = BASE_MS):
-    from repro.core import ModuleDatabase, linear_ir
-    from repro.runtime import ElasticPlanner
-
-    keys = [f"f{i}" for i in range(n_nodes)]
-    _DELAYS_MS.clear()
-    _DELAYS_MS.update({k: base_ms for k in keys})
-    db = ModuleDatabase("replan-sim")
-    for k in keys:
-        db.register(k, software=_make_impl(k))
-    ir = linear_ir("replan-sim", keys, [base_ms] * n_nodes, io_shape=(8,))
-    return ElasticPlanner(ir, db=db), keys
-
-
-def _tps(executor, tokens) -> float:
-    t0 = time.perf_counter()
-    executor.run(tokens)
-    return len(tokens) / max(time.perf_counter() - t0, 1e-9)
-
 
 def simulate(n_tokens: int = 24, smoke: bool = False) -> dict:
     """Static vs adaptive tokens/s across an injected 3x stage slowdown."""
@@ -76,7 +46,7 @@ def simulate(n_tokens: int = 24, smoke: bool = False) -> dict:
 
     if smoke:
         n_tokens = 12
-    planner, keys = _make_sim()
+    planner = make_planner("replan-sim", [BASE_MS] * N_NODES)
     prof = StageProfiler(3, min_samples=4)
     ex, _ = planner.executor_for(3, max_in_flight=2 * 3 + 2, jit=False,
                                  profiler=prof, stage_workers=True)

@@ -1,0 +1,168 @@
+"""Parallel-filter stage replication benchmark — widen the bottleneck.
+
+PR 3's adaptive re-planner could only *move* work between stages, so a
+pipeline with one dominant host-bound function was stuck at that
+function's service time no matter where the boundaries sat (recovery
+topped out well below the hardware).  TBB's answer — and Courier-FPGA's,
+whose generated pipelines use TBB *parallel* filters for the replicable
+middle stages — is to run the bottleneck filter N-wide.  This benchmark
+exercises the whole widened path:
+
+1. **Simulation** — a 4-function chain with ONE dominant sleep-backed
+   stage (the shape re-balancing cannot fix: boundaries can't split a
+   node).  A serial stage-worker executor is profiled while serving;
+   ``replan_from_profile(worker_budget=...)`` then picks "widen" over
+   "re-balance" from the measured costs and the replicated executor is
+   measured against the serial one.  Acceptance: **>= 1.5x tokens/s**,
+   zero out-of-order retirements.
+2. **Hot-swap** — the real jitted Harris pipeline behind
+   :class:`RequestQueueServer` is swapped serial -> replicated
+   mid-stream: zero dropped requests, zero post-warmup recompiles (the
+   replicated executor reuses every compiled StageFn — widening never
+   moves boundaries), and in-order retirement throughout.
+
+Feeds the ``replicate`` section of ``BENCH_pipeline.json``.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.simchain import make_planner, tps as _tps
+
+N_NODES = 4
+STAGE_MS = [0.5, 6.0, 0.5, 0.5]          # one dominant host-bound stage
+WORKER_BUDGET = 8
+
+
+def simulate(n_tokens: int = 32, smoke: bool = False) -> dict:
+    """Serial stage-worker vs planner-widened replicated executor."""
+    from repro.core import StageProfiler
+
+    if smoke:
+        n_tokens = 16
+    planner = make_planner("replicate-sim", STAGE_MS)
+    prof = StageProfiler(N_NODES, min_samples=4)
+    ex, _ = planner.executor_for(N_NODES, max_in_flight=2 * N_NODES + 2,
+                                 jit=False, profiler=prof, stage_workers=True)
+    plan0 = planner.current_plan
+    toks = [np.full((8,), float(i)) for i in range(n_tokens)]
+
+    tps_serial = _tps(ex, toks)          # profiles WHILE serving serially
+
+    decision = planner.replan_from_profile(
+        prof, worker_budget=WORKER_BUDGET,
+        max_in_flight=2 * WORKER_BUDGET + 2, jit=False)
+    if decision.executor is not None:
+        tps_replicated = _tps(decision.executor, toks)
+        ooo = decision.executor.stats().out_of_order_retired
+        decision.executor.close()
+    else:                                # no widen — report serial as-is
+        tps_replicated, ooo = tps_serial, 0
+    ex.close()
+    return {
+        "n_nodes": N_NODES, "stage_ms": list(STAGE_MS),
+        "worker_budget": WORKER_BUDGET, "n_tokens": n_tokens,
+        "n_stages": (decision.plan.n_stages if decision.plan is not None
+                     else plan0.n_stages),
+        "tps_serial": round(tps_serial, 2),
+        "tps_replicated": round(tps_replicated, 2),
+        "speedup": round(tps_replicated / max(tps_serial, 1e-9), 3),
+        "widened": bool(decision.widened),
+        "replicas": list(decision.replicas or plan0.replicas),
+        "predicted_gain": round(decision.gain, 3),
+        "out_of_order": int(ooo),
+    }
+
+
+def hot_swap(n_requests: int = 32, size: tuple[int, int] = (64, 96),
+             smoke: bool = False) -> dict:
+    """Serial -> replicated executor hot-swap over the jitted Harris app."""
+    import jax
+
+    from repro.core import assign_replicas, courier_offload
+    from repro.core.tracer import Library
+    from repro.launch.serve import RequestQueueServer
+    from repro.models.harris import corner_harris_demo, make_harris_db
+
+    if smoke:
+        n_requests = 16
+    db = make_harris_db(with_hw=False)
+    lib = Library(db)
+    app = corner_harris_demo(lib)
+    H, W = size
+    frames = [jax.random.uniform(jax.random.PRNGKey(i), (H, W, 3)) * 255
+              for i in range(n_requests)]
+    off = courier_offload(app, frames[0], db=db, prefer_hw=False)
+    pipe = off.pipeline
+    plan = assign_replicas(pipe.plan, pipe.ir, worker_budget=WORKER_BUDGET)
+    mb = 4
+    ex_serial = pipe.executor(microbatch=mb, pad_microbatches=True)
+    ex_serial.warmup(frames[0])
+    compiles_warm = pipe.compile_count()
+
+    with RequestQueueServer(ex_serial, max_batch=mb, max_wait_ms=3.0) as srv:
+        reqs = [srv.submit(f) for f in frames[: n_requests // 2]]
+        # replicated executor over the SAME compiled stages: widening never
+        # moves boundaries, so the swap pays zero recompiles
+        ex_rep = pipe.executor(microbatch=mb, pad_microbatches=True,
+                               replicas=plan.replicas)
+        srv.swap_executor(ex_rep, warm_args=(frames[0],))
+        reqs += [srv.submit(f) for f in frames[n_requests // 2:]]
+        served = dropped = 0
+        for r in reqs:
+            try:
+                r.wait(timeout=120.0)
+                served += 1
+            except Exception:
+                dropped += 1
+    ooo = (ex_serial.stats().out_of_order_retired
+           + ex_rep.stats().out_of_order_retired)
+    ex_rep.close()
+    return {
+        "requests": n_requests, "served": served, "dropped": dropped,
+        "swaps": srv.swaps, "replicas": list(plan.replicas),
+        "recompiles_after_warmup": pipe.compile_count() - compiles_warm,
+        "out_of_order": int(ooo),
+        "shape": [H, W],
+    }
+
+
+_payload_cache: dict = {}
+
+
+def payload(smoke: bool = False) -> dict:
+    key = bool(smoke)
+    if key not in _payload_cache:
+        _payload_cache[key] = {"sim": simulate(smoke=smoke),
+                               "hot_swap": hot_swap(smoke=smoke)}
+    return _payload_cache[key]
+
+
+def run(smoke: bool = False) -> list:
+    p = payload(smoke=smoke)
+    sim, hs = p["sim"], p["hot_swap"]
+    return [
+        ("replicate.sim.tps_serial", sim["tps_serial"],
+         f"{sim['n_nodes']} nodes; dominant stage {max(sim['stage_ms'])} ms; "
+         "serial stage workers"),
+        ("replicate.sim.tps_replicated", sim["tps_replicated"],
+         f"worker budget {sim['worker_budget']} -> replicas "
+         f"{sim['replicas']}"),
+        ("replicate.sim.speedup", sim["speedup"],
+         "replicated vs serial tokens/s (acceptance >= 1.5)"),
+        ("replicate.sim.out_of_order", sim["out_of_order"],
+         "retirements out of submission order (acceptance 0)"),
+        ("replicate.hot_swap.dropped", hs["dropped"],
+         f"{hs['served']}/{hs['requests']} served across "
+         f"{hs['swaps']} serial->replicated swap(s)"),
+        ("replicate.hot_swap.recompiles_after_warmup",
+         hs["recompiles_after_warmup"],
+         "compile_count delta across the serial->replicated hot-swap"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run(smoke="--smoke" in sys.argv[1:]):
+        print(",".join(str(x) for x in r))

@@ -33,8 +33,9 @@ def _emit(mod) -> None:
 
 
 def main() -> None:
-    from benchmarks import (fig4_callgraph, fusion, replan, roofline,
-                            table1_pipeline, table2_modules, table3_resources)
+    from benchmarks import (fig4_callgraph, fusion, replan, replicate,
+                            roofline, table1_pipeline, table2_modules,
+                            table3_resources)
 
     smoke = "--smoke" in sys.argv[1:]
     print("name,value,derived")
@@ -56,6 +57,15 @@ def main() -> None:
             print(f"smoke.replan.dropped,{rep['hot_swap']['dropped']},"
                   f"{rep['hot_swap']['served']} served; "
                   f"{rep['hot_swap']['recompiles_after_warmup']} recompiles")
+            wide = replicate.payload(smoke=True)
+            reps = str(wide['sim']['replicas']).replace(",", ";")
+            print(f"smoke.replicate.speedup,{wide['sim']['speedup']},"
+                  f"replicated {wide['sim']['tps_replicated']} tps vs serial "
+                  f"{wide['sim']['tps_serial']} tps; replicas {reps}")
+            print(f"smoke.replicate.dropped,{wide['hot_swap']['dropped']},"
+                  f"{wide['hot_swap']['served']} served; "
+                  f"{wide['hot_swap']['recompiles_after_warmup']} recompiles; "
+                  f"{wide['sim']['out_of_order']} out-of-order")
             path = table1_pipeline.write_bench_json(smoke=True)
             print(f"smoke.bench_json,0,{path}")
         except Exception as e:
@@ -64,10 +74,10 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
             sys.exit(1)
         return
-    # replan last: its thread pools and serving loops are the noisiest
-    # neighbors for the wall-clock benchmarks that precede it
+    # replan/replicate last: their thread pools and serving loops are the
+    # noisiest neighbors for the wall-clock benchmarks that precede them
     for mod in (table1_pipeline, table2_modules, table3_resources,
-                fig4_callgraph, fusion, roofline, replan):
+                fig4_callgraph, fusion, roofline, replan, replicate):
         _emit(mod)
     try:
         path = table1_pipeline.write_bench_json()

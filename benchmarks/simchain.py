@@ -1,0 +1,51 @@
+"""Sleep-backed simulated pipeline chains (shared benchmark scaffolding).
+
+Both the adaptive-replan and the stage-replication benchmarks drive the
+planner with the same device-free fixture: a linear chain of library
+functions whose per-call processing time is a host ``time.sleep`` read
+from a mutable knob at CALL time, so drift can be injected (or a stage
+can simply dominate) without any retrace/recompile.  The registered
+impls carry ``__name__ = key`` because the planner's database lookups
+key on the function name — keep that invariant here, in one place.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+# per-function processing-time knob, read at call time (the drift injector);
+# each benchmark resets it via make_planner, and benchmarks run sequentially
+DELAYS_MS: dict[str, float] = {}
+
+
+def make_impl(key: str):
+    def sw(x):
+        time.sleep(DELAYS_MS[key] / 1e3)
+        return np.asarray(x) + 1.0
+    sw.__name__ = key
+    return sw
+
+
+def make_planner(name: str, times_ms, io_shape=(8,)):
+    """ElasticPlanner over a sleep-backed chain; one node per entry of
+    ``times_ms``, keys ``f0..fN-1``, knobs initialized to those times."""
+    from repro.core import ModuleDatabase, linear_ir
+    from repro.runtime import ElasticPlanner
+
+    keys = [f"f{i}" for i in range(len(times_ms))]
+    DELAYS_MS.clear()
+    DELAYS_MS.update(dict(zip(keys, (float(t) for t in times_ms))))
+    db = ModuleDatabase(name)
+    for k in keys:
+        db.register(k, software=make_impl(k))
+    ir = linear_ir(name, keys, [float(t) for t in times_ms],
+                   io_shape=io_shape)
+    return ElasticPlanner(ir, db=db)
+
+
+def tps(executor, tokens) -> float:
+    """Blocking tokens-per-second of one run over ``tokens``."""
+    t0 = time.perf_counter()
+    executor.run(tokens)
+    return len(tokens) / max(time.perf_counter() - t0, 1e-9)

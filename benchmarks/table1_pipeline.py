@@ -127,10 +127,15 @@ def measured_numbers(n_frames: int = 12, hw: bool = True,
     t_seq = best_ms(run_eager)
     t_seqjit = best_ms(run_staged)
 
-    # async executor (eager issue, bounded pool); pool sized for throughput.
-    # Interleave the wavefront/async reps so both sample the same background
-    # noise (shared-container throughput swings dominate single runs).
-    ex = off.pipeline.executor(max_in_flight=n_frames)
+    # async executor (eager issue, bounded pool).  The pool is sized like
+    # the wavefront's (~2x stages), NOT to the whole frame stream: on a
+    # small host the live working set (pool x frame + intermediates) is
+    # what dominates per-frame wall time, and an n_frames pool measurably
+    # loses to the wavefront on big frames purely through allocator/cache
+    # pressure.  Interleave the wavefront/async reps so both sample the
+    # same background noise (shared-container swings dominate single runs).
+    S = off.pipeline.plan.n_stages
+    ex = off.pipeline.executor(max_in_flight=2 * S + 1)
     jax.block_until_ready(ex.run(frames[:2]))
     ex.reset_stats()
     t_pipe = t_async = float("inf")
@@ -141,7 +146,8 @@ def measured_numbers(n_frames: int = 12, hw: bool = True,
 
     # async executor + per-stage micro-batching (stacked token groups)
     mb = 4
-    exb = off.pipeline.executor(max_in_flight=n_frames, microbatch=mb)
+    exb = off.pipeline.executor(max_in_flight=max(2 * S + 1, 2 * mb),
+                                microbatch=mb)
     jax.block_until_ready(exb.run(frames[:mb]))
     t_batched = best_ms(lambda: exb.run(frames))
 
@@ -169,19 +175,20 @@ def measured_numbers(n_frames: int = 12, hw: bool = True,
 # --------------------------------------------------------------------------- #
 def bench_payload(smoke: bool = False) -> dict:
     """sequential / wavefront / async / fused tokens-per-sec + bottleneck ms,
-    plus the fusion and adaptive-replan benchmarks — the perf trajectory
-    tracked across PRs."""
-    from benchmarks import fusion, replan
+    plus the fusion, adaptive-replan, and stage-replication benchmarks —
+    the perf trajectory tracked across PRs."""
+    from benchmarks import fusion, replan, replicate
 
     n_frames = 2 if smoke else 12
     size = (64, 96) if smoke else (270, 480)
     # fusion comparison first: it is the finest-grained measurement and the
     # most sensitive to allocator/background state left by the big-frame
-    # run; the replan benchmark LAST — its thread pools and serving loops
-    # are the noisiest neighbors of all
+    # run; the replan/replicate benchmarks LAST — their thread pools and
+    # serving loops are the noisiest neighbors of all
     fus = fusion.payload(smoke=smoke)
     m = measured_numbers(n_frames=n_frames, hw=True, size=size)
     rep = replan.payload(smoke=smoke)
+    wide = replicate.payload(smoke=smoke)
     return {
         "bench": "table1_pipeline", "smoke": bool(smoke),
         "shape": m["shape"], "n_frames": m["n_frames"],
@@ -202,6 +209,7 @@ def bench_payload(smoke: bool = False) -> dict:
         "compile_count_steady": m["compile_count"],
         "fusion": fus,
         "replan": rep,
+        "replicate": wide,
     }
 
 

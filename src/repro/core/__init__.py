@@ -14,15 +14,17 @@ from .costmodel import (CostModel, FusionEstimate, NodeCost, PEAK_FLOPS_BF16,
                         HBM_BW, ICI_BW_PER_LINK, HBM_BYTES, PROFILE_MARGIN,
                         VMEM_BYTES, attention_cost, elementwise_cost,
                         fused_cost, matmul_cost, measure_ms,
-                        measured_contradicts, stencil_cost)
+                        measured_contradicts, replicated_bottleneck_ms,
+                        stencil_cost)
 from .database import ModuleDatabase, ModuleEntry, default_db
 from .executor import (ExecutorStats, PendingToken, PipelineExecutor,
                        StageCounters)
 from .ir import CourierIR, Node, Value, linear_ir
 from .offloader import OffloadedFunction, OffloadPlan, courier_offload
-from .partition import (PipelinePlan, StagePlan, fuse_adjacent_hw,
-                        fused_working_set_bytes, make_model_fused_cost,
-                        partition_optimal, partition_paper, split_fused_node)
+from .partition import (PipelinePlan, StagePlan, assign_replicas,
+                        fuse_adjacent_hw, fused_working_set_bytes,
+                        make_model_fused_cost, partition_optimal,
+                        partition_paper, split_fused_node)
 from .pipeline import (BuiltPipeline, PipelineGenerator, StageFn,
                        assign_placements, make_stage_fns)
 from .profiler import StageProfiler
@@ -34,12 +36,13 @@ __all__ = [
     "CostModel", "FusionEstimate", "NodeCost", "PEAK_FLOPS_BF16", "HBM_BW",
     "ICI_BW_PER_LINK", "HBM_BYTES", "PROFILE_MARGIN", "VMEM_BYTES",
     "attention_cost", "elementwise_cost", "fused_cost", "matmul_cost",
-    "measure_ms", "measured_contradicts", "stencil_cost",
+    "measure_ms", "measured_contradicts", "replicated_bottleneck_ms",
+    "stencil_cost",
     "ModuleDatabase", "ModuleEntry", "default_db",
     "ExecutorStats", "PendingToken", "PipelineExecutor", "StageCounters",
     "CourierIR", "Node", "Value", "linear_ir",
     "OffloadedFunction", "OffloadPlan", "courier_offload",
-    "PipelinePlan", "StagePlan", "fuse_adjacent_hw",
+    "PipelinePlan", "StagePlan", "assign_replicas", "fuse_adjacent_hw",
     "fused_working_set_bytes", "make_model_fused_cost", "partition_optimal",
     "partition_paper", "split_fused_node",
     "BuiltPipeline", "PipelineGenerator", "StageFn", "assign_placements",

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -193,6 +193,32 @@ def attention_cost(batch: int, q_len: int, kv_len: int, heads: int,
         + 2 * kv_heads * eff_kv * head_dim            # K, V
         + heads * q_len * head_dim)                   # out
     return NodeCost(flops=flops, bytes_rw=byts)
+
+
+# --------------------------------------------------------------------------- #
+# Stage replication (TBB parallel filters — widen instead of re-balance)
+# --------------------------------------------------------------------------- #
+def replicated_bottleneck_ms(stage_ms: "Sequence[float]",
+                             replicas: "Sequence[int]") -> float:
+    """Predicted steady-state token period of a replicated pipeline plan.
+
+    A stage whose one-worker service time is ``t`` and which runs ``r``
+    parallel workers retires a token every ``t / r`` ms once its replicas
+    are saturated (the TBB parallel-filter throughput model), so the
+    pipeline period is ``max_k t_k / r_k``.  This is the quantity the
+    re-planner compares between "move the boundaries" and "widen the
+    bottleneck" candidates; with all replicas 1 it reduces to the plain
+    bottleneck.  Host-side hand-off overhead is deliberately folded into
+    the measured ``stage_ms`` (the profiler times the whole stage
+    invocation), not modeled separately.
+    """
+    if len(stage_ms) != len(replicas):
+        raise ValueError(f"{len(stage_ms)} stage times vs "
+                         f"{len(replicas)} replica counts")
+    if not stage_ms:
+        return 0.0
+    return max(float(t) / max(int(r), 1)
+               for t, r in zip(stage_ms, replicas))
 
 
 # --------------------------------------------------------------------------- #

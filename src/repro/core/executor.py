@@ -39,6 +39,22 @@ pool:
   worker ``s+1``; host-bound stages (callbacks, eager sw fallbacks) then
   overlap across *threads* instead of relying on device async dispatch,
   which on CPU backends provides no inter-stage overlap at all.
+* **Replicated stages** (``replicas=[r0, r1, ...]``) — TBB's *parallel*
+  filter kind: stage ``s`` runs ``r_s`` worker threads, so a stage that
+  dominates the token period can be *widened* instead of only re-balanced.
+  The dataflow is a sequence-numbered ring per replica: admitted groups
+  get a monotonically increasing sequence number; replica ``w`` of a stage
+  with ``r`` replicas owns the seqs ``w, w+r, w+2r, ...`` and consumes
+  them in that order from a preallocated slot ring (each seq has exactly
+  one producer — the upstream worker that finished it — so slots are
+  single-producer/single-consumer and the hand-off cost is one flag flip,
+  not a queue mutation).  Envs ride through the stages unmodified (no
+  per-group dict rebuilds on the steady path) and are handed off with no
+  retained references, so :class:`~repro.core.pipeline.StageFn` buffer
+  donation stays safe.  A reorder buffer at retirement — the in-order
+  ``_inflight`` deque plus each group's completion event — guarantees
+  tokens retire in submission order even when replicas finish out of
+  order; ``ExecutorStats.out_of_order_retired`` asserts it stayed zero.
 
 Completion is in-order (tokens retire oldest-first), matching the paper's
 ``serial_in_order`` first/last filters.
@@ -83,11 +99,13 @@ class StageCounters:
     tokens: int = 0        # tokens pushed through this stage
     issue_ms: float = 0.0  # host time spent dispatching this stage
     exec_ms: float = 0.0   # measured stage wall time (threaded/sampled only)
+    replicas: int = 1      # worker threads serving this stage
 
     def as_dict(self) -> dict:
         return {"issued": self.issued, "tokens": self.tokens,
                 "issue_ms": round(self.issue_ms, 4),
-                "exec_ms": round(self.exec_ms, 4)}
+                "exec_ms": round(self.exec_ms, 4),
+                "replicas": self.replicas}
 
 
 @dataclass
@@ -102,6 +120,7 @@ class ExecutorStats:
     occupancy_samples: int = 0
     occupancy_sum: int = 0
     wall_ms: float = 0.0           # accumulated blocking run() wall time
+    out_of_order_retired: int = 0  # groups retired out of submission order
 
     @property
     def mean_occupancy(self) -> float:
@@ -122,11 +141,43 @@ class ExecutorStats:
             "tokens_retired": self.tokens_retired,
             "groups_admitted": self.groups_admitted,
             "max_in_flight_seen": self.max_in_flight_seen,
+            "out_of_order_retired": self.out_of_order_retired,
             "mean_occupancy": round(self.mean_occupancy, 3),
             "wall_ms": round(self.wall_ms, 3),
             "throughput_tps": round(self.throughput_tps, 2),
             "per_stage": [s.as_dict() for s in self.per_stage],
         }
+
+
+# --------------------------------------------------------------------------- #
+# Token signatures (micro-batch grouping)
+# --------------------------------------------------------------------------- #
+# python scalars have a fixed promoted dtype per type; cache it once instead
+# of paying a jnp.result_type dispatch per token arg on the admit path
+_SCALAR_SIG: dict[type, tuple] = {}
+
+
+def _sig_of(args: tuple) -> tuple:
+    """Shape/dtype signature of one token, off the jnp dispatch path.
+
+    Arrays (jax/numpy) expose ``shape``/``dtype`` as cached attributes —
+    reading them is orders of magnitude cheaper than ``jnp.shape`` +
+    ``jnp.result_type``, which the admit loop previously paid per arg per
+    token (the dominant per-token overhead of async mode vs the wavefront).
+    """
+    sig = []
+    for a in args:
+        try:
+            sig.append((a.shape, a.dtype))
+        except AttributeError:
+            t = type(a)
+            s = _SCALAR_SIG.get(t)
+            if s is None or not isinstance(a, (bool, int, float, complex)):
+                s = (tuple(jnp.shape(a)), jnp.result_type(a))
+                if isinstance(a, (bool, int, float, complex)):
+                    _SCALAR_SIG[t] = s
+            sig.append(s)
+    return tuple(sig)
 
 
 # --------------------------------------------------------------------------- #
@@ -136,7 +187,7 @@ class _Group:
     """One admitted token group: a (possibly stacked) env fully issued."""
 
     __slots__ = ("env", "size", "stacked", "results", "done", "error", "lock",
-                 "future")
+                 "future", "seq", "fns", "evt")
 
     def __init__(self, env: dict | None, size: int, stacked: bool):
         self.env = env                # None until all stages are issued
@@ -147,6 +198,68 @@ class _Group:
         self.error: BaseException | None = None   # stage issue failed
         self.lock = threading.Lock()  # serializes issue + finalization
         self.future: Future | None = None  # last-stage future (threaded mode)
+        self.seq: int | None = None   # admission sequence (replicated mode)
+        self.fns: tuple | None = None  # resolved stage fns (replicated mode)
+        self.evt: threading.Event | None = None  # completion (replicated mode)
+
+
+class _SeqRing:
+    """Sequence-indexed slot ring feeding ONE replica of ONE stage.
+
+    Replica ``w`` of a stage replicated ``r``-wide owns group sequence
+    numbers ``w, w+r, w+2r, ...`` and consumes them strictly in that
+    order; the slot for seq ``n`` is ``(n // r) % cap``.  Every seq has
+    exactly one producer (the upstream worker that completed it), so each
+    slot is written by one thread and read by one thread — an SPSC
+    hand-off guarded only for the ready-flag flip.  Slots are
+    preallocated; the token envs ride on the group object, so the steady
+    path moves one reference, never rebuilds a dict.
+    """
+
+    __slots__ = ("cap", "stride", "slots", "cond", "next_seq", "closed")
+
+    def __init__(self, cap: int, stride: int, first_seq: int):
+        self.cap = cap
+        self.stride = stride
+        self.next_seq = first_seq          # next owned seq to consume
+        self.slots: list = [None] * cap    # (seq, group) | None = free
+        self.cond = threading.Condition(threading.Lock())
+        self.closed = False
+
+    def _idx(self, seq: int) -> int:
+        return (seq // self.stride) % self.cap
+
+    def put(self, seq: int, group: "_Group") -> None:
+        i = self._idx(seq)
+        with self.cond:
+            # capacity guard: unreachable while cap > token pool (the pool
+            # bounds in-flight seq span), kept for safety
+            while self.slots[i] is not None and not self.closed:
+                self.cond.wait()
+            if self.closed:
+                return
+            self.slots[i] = (seq, group)
+            self.cond.notify_all()
+
+    def pop(self) -> "tuple[int, _Group] | None":
+        """Block for this replica's next owned seq; ``None`` once closed."""
+        with self.cond:
+            while True:
+                i = self._idx(self.next_seq)
+                item = self.slots[i]
+                if item is not None and item[0] == self.next_seq:
+                    self.slots[i] = None
+                    self.next_seq += self.stride
+                    self.cond.notify_all()
+                    return item
+                if self.closed:
+                    return None
+                self.cond.wait()
+
+    def close(self) -> None:
+        with self.cond:
+            self.closed = True
+            self.cond.notify_all()
 
 
 class PendingToken:
@@ -194,7 +307,9 @@ class PipelineExecutor:
         repeating the last token, so the vmapped stage executables compile
         for a closed set of leading-axis sizes — serving loops use this to
         keep partial batches off the compile path.  Padding rows are
-        dropped at retirement.
+        dropped at retirement.  Singleton groups are exempt: they take the
+        per-token executables (always warmed) directly, skipping the
+        stack/unstack round-trip and the padded compute.
     buckets:
         With ``pad_microbatches``, the closed set of group sizes to pad up
         to (e.g. ``(1, 2, 4, 8)``).  A ragged group is padded to the
@@ -219,6 +334,15 @@ class PipelineExecutor:
         and different stages overlap across OS threads.  Use for pipelines
         whose stage time is host-bound (eager sw fallbacks, callbacks) —
         JAX async dispatch alone gives those zero overlap on CPU.
+    replicas:
+        Per-stage worker counts (TBB's *parallel* filters): stage ``s``
+        runs on ``replicas[s]`` threads fed by sequence-numbered
+        SPSC-per-replica rings, with a reorder buffer guaranteeing
+        in-order retirement (see module docstring).  Implies the threaded
+        execution model; ``stage_workers`` is ignored when given.  Use
+        :func:`repro.core.partition.assign_replicas` to pick the factors
+        from measured stage costs.  All-ones is the serial threaded model
+        on the ring dataflow.
     """
 
     def __init__(self, stage_fns: Sequence[Callable],
@@ -227,7 +351,8 @@ class PipelineExecutor:
                  pad_microbatches: bool = False,
                  buckets: Sequence[int] | None = None,
                  batched_fns: Sequence[Callable] | None = None,
-                 profiler: Any = None, stage_workers: bool = False):
+                 profiler: Any = None, stage_workers: bool = False,
+                 replicas: Sequence[int] | None = None):
         if max_in_flight is not None and max_in_flight < 1:
             raise ValueError(
                 f"max_in_flight must be >= 1 (got {max_in_flight}); "
@@ -237,20 +362,40 @@ class PipelineExecutor:
         self.stage_fns = list(stage_fns)
         self.graph_inputs = list(graph_inputs)
         self.graph_outputs = list(graph_outputs)
-        self.pool = max_in_flight if max_in_flight is not None \
-            else len(self.stage_fns) + 1
+        self.replicas: list[int] | None = None
+        if replicas is not None:
+            reps = [int(r) for r in replicas]
+            if len(reps) != len(self.stage_fns):
+                raise ValueError(
+                    f"replicas must name every stage: got {len(reps)} for "
+                    f"{len(self.stage_fns)} stages")
+            if any(r < 1 for r in reps):
+                raise ValueError(f"replica counts must be >= 1 (got {reps})")
+            self.replicas = reps
+        if max_in_flight is not None:
+            self.pool = max_in_flight
+        elif self.replicas is not None:
+            # widened stages need proportionally more in-flight tokens to
+            # keep every replica busy (double-buffered worker count)
+            self.pool = sum(self.replicas) + 1
+        else:
+            self.pool = len(self.stage_fns) + 1
         self.microbatch = min(microbatch, self.pool)
         self.pad_microbatches = pad_microbatches and self.microbatch > 1
         if buckets is not None:
             bs = sorted({int(b) for b in buckets
                          if 1 <= int(b) <= self.microbatch})
-            self.buckets: tuple[int, ...] | None = tuple(bs) or None
+            # microbatch is the explicit final bucket, so _pad_for always
+            # lands on a warmed size — never a silent new executable
+            self.buckets: tuple[int, ...] | None = tuple(
+                bs + ([self.microbatch] if (not bs or bs[-1] != self.microbatch)
+                      else []))
         else:
             self.buckets = None
         self._batched_fns: list[Callable] | None = (
             list(batched_fns) if batched_fns is not None else None)
         self.profiler = profiler
-        self.stage_workers = bool(stage_workers)
+        self.stage_workers = bool(stage_workers) and self.replicas is None
         self._pools: list[ThreadPoolExecutor] | None = None
         if self.stage_workers:
             # one SERIAL worker per stage: per-stage ordering is preserved
@@ -263,8 +408,26 @@ class PipelineExecutor:
         self._occupancy = 0               # live (non-retired) tokens
         self._lock = threading.RLock()
         self.closed = False
-        self._stats = ExecutorStats(
-            per_stage=[StageCounters() for _ in self.stage_fns])
+        self._seq = 0                     # admission sequence (replicated)
+        self._next_retire_seq = 0         # in-order retirement watermark
+        self._rings: list[list[_SeqRing]] | None = None
+        self._replica_threads: list[threading.Thread] = []
+        if self.replicas is not None:
+            cap = self.pool + 2           # > max in-flight seq span
+            self._rings = [[_SeqRing(cap, r, w) for w in range(r)]
+                           for r in self.replicas]
+            for si, r in enumerate(self.replicas):
+                for w in range(r):
+                    t = threading.Thread(
+                        target=self._replica_loop, args=(si, w),
+                        name=f"stage-{si}-replica-{w}", daemon=True)
+                    t.start()
+                    self._replica_threads.append(t)
+        self._stats = ExecutorStats(per_stage=self._fresh_counters())
+
+    def _fresh_counters(self) -> list[StageCounters]:
+        reps = self.replicas or [1] * len(self.stage_fns)
+        return [StageCounters(replicas=r) for r in reps]
 
     # -- construction helpers ------------------------------------------------ #
     @classmethod
@@ -273,6 +436,7 @@ class PipelineExecutor:
                       pad_microbatches: bool = False,
                       buckets: Sequence[int] | None = None,
                       profiler: Any = None, stage_workers: bool = False,
+                      replicas: Sequence[int] | None = None,
                       ) -> "PipelineExecutor":
         """Build from a :class:`repro.core.pipeline.BuiltPipeline`.
 
@@ -286,7 +450,7 @@ class PipelineExecutor:
                    max_in_flight=mif, microbatch=microbatch,
                    pad_microbatches=pad_microbatches, buckets=buckets,
                    batched_fns=batched, profiler=profiler,
-                   stage_workers=stage_workers)
+                   stage_workers=stage_workers, replicas=replicas)
 
     # -- public API ---------------------------------------------------------- #
     def submit(self, *args: Any) -> PendingToken:
@@ -306,6 +470,8 @@ class PipelineExecutor:
         admitted, so callers never lose — or double-issue — work that is
         already on the device.
         """
+        if self.closed:
+            raise RuntimeError("executor is closed; build a fresh one")
         toks = [t if isinstance(t, tuple) else (t,) for t in tokens]
         for i, t in enumerate(toks):
             if len(t) != len(self.graph_inputs):
@@ -370,6 +536,12 @@ class PipelineExecutor:
         if self._pools is not None:
             for p in self._pools:
                 p.shutdown(wait=True)
+        if self._rings is not None:
+            for stage_rings in self._rings:
+                for ring in stage_rings:
+                    ring.close()
+            for t in self._replica_threads:
+                t.join(timeout=30.0)
 
     def compile_count(self) -> int:
         """Executables compiled across per-token and vmapped stage fns.
@@ -391,8 +563,7 @@ class PipelineExecutor:
 
     def reset_stats(self) -> None:
         with self._lock:
-            self._stats = ExecutorStats(
-                per_stage=[StageCounters() for _ in self.stage_fns])
+            self._stats = ExecutorStats(per_stage=self._fresh_counters())
 
     @property
     def in_flight(self) -> int:
@@ -409,8 +580,7 @@ class PipelineExecutor:
         cur: list[tuple] = []
         cur_sig: tuple | None = None
         for t in toks:
-            sig = tuple((tuple(jnp.shape(a)), jnp.result_type(a).name)
-                        for a in t)
+            sig = _sig_of(t)
             if cur and (sig != cur_sig or len(cur) >= self.microbatch):
                 yield cur
                 cur = []
@@ -443,13 +613,29 @@ class PipelineExecutor:
 
     def _pad_for(self, size: int) -> int:
         """Padding rows for a ragged group: to the smallest bucket that
-        fits (bucketed mode) or all the way to ``microbatch``."""
-        if not self.pad_microbatches or size >= self.microbatch:
+        fits (bucketed mode) or all the way to ``microbatch``.
+
+        ``microbatch`` itself is always the explicit final bucket (the
+        constructor appends it), so every padded size lands on an
+        executable ``warmup`` compiled; a size no bucket fits — only
+        reachable by bypassing ``_group_tokens``'s microbatch cap — is an
+        error, never a silent compile of a new group size.
+
+        Singleton groups are never padded: the per-token executables are
+        always compiled (``warmup`` runs a single token first), so padding
+        one real row up to a bucket would only buy a stack/unstack
+        round-trip plus wasted padded compute.
+        """
+        if not self.pad_microbatches or size >= self.microbatch or size == 1:
             return 0
         if self.buckets:
             for b in self.buckets:
                 if b >= size:
                     return b - size
+            raise RuntimeError(
+                f"group size {size} exceeds every pad bucket "
+                f"{self.buckets}; grouping should cap at microbatch="
+                f"{self.microbatch}")
         return self.microbatch - size
 
     def _admit(self, group_toks: list[tuple]) -> list[PendingToken]:
@@ -475,6 +661,11 @@ class PipelineExecutor:
             with self._lock:
                 if not self._inflight or self._occupancy + size <= self.pool:
                     self._inflight.append(g)
+                    if self._rings is not None:
+                        # seq assigned under the SAME lock as the in-order
+                        # deque append: retirement order == seq order
+                        g.seq = self._seq
+                        self._seq += 1
                     self._occupancy += size
                     self._stats.tokens_admitted += size
                     self._stats.groups_admitted += 1
@@ -494,7 +685,15 @@ class PipelineExecutor:
         try:
             fns = self._stage_fns_for(size + pad if stacked else 1)
             counters = []
-            if self._pools is not None:
+            if self._rings is not None:
+                t0 = time.perf_counter()
+                g.env = env
+                g.fns = tuple(fns)
+                g.evt = threading.Event()
+                self._route(0, g.seq, g)
+                enq = (time.perf_counter() - t0) * 1e3 / max(len(fns), 1)
+                counters = [(si, enq) for si in range(len(fns))]
+            elif self._pools is not None:
                 t0 = time.perf_counter()
                 self._issue_threaded(g, env, fns)
                 enq = (time.perf_counter() - t0) * 1e3 / max(len(fns), 1)
@@ -529,6 +728,13 @@ class PipelineExecutor:
                     self._inflight.remove(g)
                 except ValueError:
                     pass
+            if self._rings is not None and g.seq is not None \
+                    and g.evt is None:
+                # the seq was reserved but never routed: push the poisoned
+                # group through anyway so replica rings (which consume owned
+                # seqs strictly in order) never stall on a gap
+                g.evt = threading.Event()
+                self._route(0, g.seq, g)
             raise
         finally:
             g.lock.release()
@@ -539,6 +745,44 @@ class PipelineExecutor:
                 c.tokens += size
                 c.issue_ms += ms
         return [PendingToken(self, g, i) for i in range(size)]
+
+    # -- replicated-stage dataflow (sequence-numbered rings) ----------------- #
+    def _route(self, si: int, seq: int, g: _Group) -> None:
+        """Hand a group to stage ``si``'s owning replica ring (seq mod r)."""
+        r = self.replicas[si]
+        self._rings[si][seq % r].put(seq, g)
+
+    def _replica_loop(self, si: int, w: int) -> None:
+        """Worker loop for replica ``w`` of stage ``si``.
+
+        Pops this replica's owned seqs in order, runs the stage to
+        completion (blocking on device work), and routes the group to the
+        next stage's owning replica — or signals completion after the last
+        stage.  An errored group is forwarded without executing further
+        stages, so downstream replicas never stall on a skipped seq.
+        """
+        ring = self._rings[si][w]
+        last = si == len(self.stage_fns) - 1
+        while True:
+            item = ring.pop()
+            if item is None:
+                return
+            seq, g = item
+            if g.error is None:
+                t0 = time.perf_counter()
+                try:
+                    g.env = jax.block_until_ready(g.fns[si](g.env))
+                    ms = (time.perf_counter() - t0) * 1e3
+                    if self.profiler is not None:
+                        self.profiler.record(si, ms, replica=w)
+                    with self._lock:
+                        self._stats.per_stage[si].exec_ms += ms
+                except BaseException as e:
+                    g.error = e
+            if last:
+                g.evt.set()
+            else:
+                self._route(si + 1, seq, g)
 
     def _issue_threaded(self, g: _Group, env: dict,
                         fns: Sequence[Callable]) -> None:
@@ -587,7 +831,11 @@ class PipelineExecutor:
         with g.lock:
             if not g.done:
                 try:
-                    if g.future is not None:      # threaded stage workers
+                    if g.evt is not None:         # replicated stage workers
+                        g.evt.wait()
+                        if g.error is not None:
+                            raise g.error
+                    elif g.future is not None:    # threaded stage workers
                         g.env = g.future.result()
                     out = self._out_of(g.env)
                     jax.block_until_ready(out)
@@ -612,6 +860,13 @@ class PipelineExecutor:
             if finalized_here:           # exactly-once accounting per group
                 self._stats.tokens_retired += g.size
                 self._occupancy -= g.size
+                if g.seq is not None:
+                    # reorder-buffer audit: retirement must consume seqs
+                    # monotonically even when replicas complete out of order
+                    if g.seq < self._next_retire_seq:
+                        self._stats.out_of_order_retired += 1
+                    self._next_retire_seq = max(self._next_retire_seq,
+                                                g.seq + 1)
             # drop retired groups from the head (in-order by design)
             while self._inflight and self._inflight[0].done:
                 self._inflight.popleft()

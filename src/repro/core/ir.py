@@ -78,6 +78,12 @@ class Node:
     flops: float | None = None             # analytical cost-model annotations
     bytes_rw: float | None = None
     placement: str = "unassigned"          # "hw" | "sw" | "unassigned"
+    # TBB filter-kind marker: a serial-only function is not side-effect safe
+    # (hidden state, ordered I/O, RNG, in-place buffers), so any stage
+    # containing it must keep exactly ONE worker — assign_replicas never
+    # widens it.  Pure array functions (everything the tracer records from
+    # jnp/Pallas modules) default to replicable.
+    serial_only: bool = False
     fused_from: list[str] = field(default_factory=list)  # names of fused originals
     # per-part input shapes recorded at fusion time, one list per fused part;
     # lets the backend re-check shape-gated hw applicability per part when it

@@ -27,7 +27,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
-from .costmodel import VMEM_BYTES, FusionEstimate, NodeCost, fused_cost
+from .costmodel import (VMEM_BYTES, FusionEstimate, NodeCost, fused_cost,
+                        replicated_bottleneck_ms)
 from .database import ModuleDatabase
 from .ir import CourierIR, Node
 
@@ -35,6 +36,7 @@ __all__ = [
     "StagePlan", "PipelinePlan",
     "partition_paper", "partition_optimal", "fuse_adjacent_hw",
     "fused_working_set_bytes", "make_model_fused_cost", "split_fused_node",
+    "assign_replicas",
 ]
 
 
@@ -45,6 +47,7 @@ class StagePlan:
     kind: str = "parallel"            # "serial_in_order" | "parallel" (TBB)
     placements: list[str] = field(default_factory=list)   # "hw"/"sw" per node
     comm_in_bytes: int = 0            # intermediate data entering this stage
+    replicas: int = 1                 # worker threads (TBB parallel filter)
 
 
 @dataclass
@@ -58,24 +61,47 @@ class PipelinePlan:
 
     @property
     def bottleneck_ms(self) -> float:
+        """Slowest stage's one-worker service time (replication ignored)."""
         return max(s.est_time_ms for s in self.stages)
+
+    @property
+    def replicas(self) -> list[int]:
+        return [s.replicas for s in self.stages]
+
+    @property
+    def total_workers(self) -> int:
+        return sum(s.replicas for s in self.stages)
+
+    @property
+    def effective_bottleneck_ms(self) -> float:
+        """Predicted token period with stage replication applied.
+
+        A stage ``r`` workers wide retires a token every ``t / r`` ms in
+        steady state, so the period is ``max_k t_k / r_k`` — equal to
+        :attr:`bottleneck_ms` for an all-serial plan.
+        """
+        return replicated_bottleneck_ms(
+            [s.est_time_ms for s in self.stages], self.replicas)
 
     def predicted_speedup(self, n_tokens: int = 1000) -> float:
         """Sequential time vs pipelined time for a long token stream.
 
         Pipeline time for T tokens = fill (sum of stages for token 0) +
-        (T-1) * bottleneck; sequential = T * sum.
+        (T-1) * bottleneck; sequential = T * sum.  Replicated stages use
+        their effective (widened) period.
         """
         total = sum(s.est_time_ms for s in self.stages)
-        pipe = total + (n_tokens - 1) * self.bottleneck_ms
+        pipe = total + (n_tokens - 1) * self.effective_bottleneck_ms
         return (n_tokens * total) / pipe
 
     def describe(self) -> str:
         rows = [f"PipelinePlan[{self.policy}] {self.n_stages} stages, "
-                f"bottleneck={self.bottleneck_ms:.2f} ms, "
+                f"bottleneck={self.effective_bottleneck_ms:.2f} ms, "
                 f"steady-state speedup={self.predicted_speedup():.2f}x"]
         for i, s in enumerate(self.stages):
-            rows.append(f"  Stage #{i} [{s.kind:>15s}] {s.est_time_ms:8.2f} ms  "
+            width = f" x{s.replicas}" if s.replicas > 1 else ""
+            rows.append(f"  Stage #{i} [{s.kind:>15s}]{width} "
+                        f"{s.est_time_ms:8.2f} ms  "
                         f"{list(zip(s.node_names, s.placements))}")
         return "\n".join(rows)
 
@@ -216,6 +242,88 @@ def partition_optimal(ir: CourierIR, max_stages: int | None = None,
 
 
 # --------------------------------------------------------------------------- #
+# Stage replication — widen the bottleneck stage (TBB parallel filters)
+# --------------------------------------------------------------------------- #
+def assign_replicas(plan: PipelinePlan, ir: CourierIR | None = None, *,
+                    worker_budget: int, target_ms: float | None = None,
+                    max_replicas: int | None = None) -> PipelinePlan:
+    """Pick per-stage replication factors under a total worker budget.
+
+    The widening rule (documented in EXPERIMENTS.md): every replicable
+    stage gets ``ceil(stage_ms / target_ms)`` workers, clamped to
+    ``[1, max_replicas]`` and to the budget.  ``target_ms`` — the token
+    period the plan is widened toward — defaults to the *smallest
+    achievable* period: the least candidate ``T`` (searched over
+    ``{stage_ms / j}`` and the serial floor) whose total worker demand
+    fits ``worker_budget``, floored by the slowest non-replicable stage
+    (no budget can widen past it).
+
+    A stage is replicable only when every node in it is side-effect safe
+    (``Node.serial_only`` unset); pass ``ir`` to enforce the markers —
+    without it every stage is assumed pure (true for traced jnp/Pallas
+    pipelines).  If the explicit ``target_ms`` demands more workers than
+    the budget allows, replicas are taken back from the stages whose
+    effective time suffers least, so the result always satisfies
+    ``plan.total_workers <= worker_budget``.
+
+    Mutates (and returns) ``plan``: only the stages' ``replicas`` fields
+    change; boundaries, times, and kinds are untouched, which is what
+    lets the executor reuse every compiled StageFn when the re-planner
+    chooses widening over re-balancing.
+    """
+    import math
+
+    times = [float(s.est_time_ms) for s in plan.stages]
+    n = len(times)
+    if n == 0:
+        return plan
+    if worker_budget < n:
+        raise ValueError(f"worker_budget {worker_budget} below the one-"
+                         f"worker-per-stage floor ({n} stages)")
+    replicable = []
+    for s in plan.stages:
+        ok = True
+        if ir is not None:
+            ok = not any(ir.node(nn).serial_only for nn in s.node_names)
+        replicable.append(ok)
+    cap = max(1, min(max_replicas if max_replicas is not None
+                     else worker_budget, worker_budget - (n - 1)))
+
+    def demand(t: float) -> list[int]:
+        """Workers per stage to hit a token period of ``t``."""
+        out = []
+        for ms, ok in zip(times, replicable):
+            if not ok or ms <= 0.0 or t <= 0.0:
+                out.append(1)
+            else:
+                out.append(min(cap, max(1, math.ceil(ms / t - 1e-9))))
+        return out
+
+    if target_ms is None:
+        # the serial floor: no widening beats the slowest serial-only stage
+        floor = max((t for t, ok in zip(times, replicable) if not ok),
+                    default=0.0)
+        cands = sorted({max(t / j, floor)
+                        for t, ok in zip(times, replicable) if t > 0
+                        for j in range(1, (cap if ok else 1) + 1)} | {floor})
+        target_ms = max(times)
+        for t in cands:
+            if t > 0 and sum(demand(t)) <= worker_budget:
+                target_ms = t
+                break
+    reps = demand(target_ms)
+    # an explicit target can over-subscribe the budget: shed replicas where
+    # the effective stage time grows least
+    while sum(reps) > worker_budget:
+        k = min((i for i in range(n) if reps[i] > 1),
+                key=lambda i: times[i] / (reps[i] - 1))
+        reps[k] -= 1
+    for s, r in zip(plan.stages, reps):
+        s.replicas = int(r)
+    return plan
+
+
+# --------------------------------------------------------------------------- #
 # Fusion pass — #pragma HLS dataflow analog, now cost-model driven
 # --------------------------------------------------------------------------- #
 def _clone_ir_shell(ir: CourierIR, name: str) -> CourierIR:
@@ -332,7 +440,8 @@ def split_fused_node(ir: CourierIR, name: str,
             inputs=list(node.fused_part_inputs[i]),
             outputs=list(node.fused_part_outputs[i]),
             params=params, time_ms=float(part_times_ms[i]),
-            time_source=node.time_source))
+            time_source=node.time_source,
+            serial_only=node.serial_only))
 
     out = _clone_ir_shell(ir, ir.name + "+defused")
     for n in ir.nodes:
@@ -425,7 +534,8 @@ def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
                         [ir.values[i].shape for i in n.inputs] for n in run],
                     fused_params=[dict(n.params) for n in run],
                     fused_part_inputs=[list(n.inputs) for n in run],
-                    fused_part_outputs=[list(n.outputs) for n in run])
+                    fused_part_outputs=[list(n.outputs) for n in run],
+                    serial_only=any(n.serial_only for n in run))
                 if fe is not None:        # thread the modeled roofline through
                     fused.flops = fe.cost.flops
                     fused.bytes_rw = fe.cost.bytes_rw

@@ -360,6 +360,7 @@ class BuiltPipeline:
                  pad_microbatches: bool = False,
                  buckets: "Sequence[int] | None" = None,
                  profiler: Any = None, stage_workers: bool = False,
+                 replicas: "Sequence[int] | None" = None,
                  ) -> "PipelineExecutor":
         """Build a :class:`~repro.core.executor.PipelineExecutor` over the
         compiled stages (bounded token pool, eager async issue, optional
@@ -369,12 +370,15 @@ class BuiltPipeline:
         pipeline's compiled (and vmapped) stage executables.  ``profiler``
         attaches a :class:`~repro.core.profiler.StageProfiler` for online
         per-stage times; ``stage_workers`` runs stages on dedicated
-        threads (host-bound pipelines)."""
+        threads (host-bound pipelines); ``replicas`` widens stages to the
+        given per-stage worker counts (TBB parallel filters — see
+        :func:`repro.core.partition.assign_replicas`)."""
         from .executor import PipelineExecutor
         return PipelineExecutor.from_pipeline(
             self, max_in_flight=max_in_flight, microbatch=microbatch,
             pad_microbatches=pad_microbatches, buckets=buckets,
-            profiler=profiler, stage_workers=stage_workers)
+            profiler=profiler, stage_workers=stage_workers,
+            replicas=replicas)
 
     def run_async(self, tokens: Iterable[tuple | Any], *,
                   max_in_flight: int | None = None,

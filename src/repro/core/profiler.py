@@ -88,6 +88,10 @@ class StageProfiler:
         self._count = [0] * n_stages
         self._ticks = 0
         self._lock = threading.Lock()
+        # per-(stage, replica) attribution for replicated stages:
+        # (stage, replica) -> [count, ema]; populated only when the
+        # executor reports a replica index
+        self._replica: dict[tuple[int, int], list] = {}
 
     def clone_for(self, n_stages: int) -> "StageProfiler":
         """Fresh profiler with the same knobs for a re-planned stage count."""
@@ -103,8 +107,16 @@ class StageProfiler:
             self._ticks += 1
         return t % self.sample_every == 0
 
-    def record(self, stage: int, ms: float) -> None:
-        """Record one measured wall time (ms) for ``stage``."""
+    def record(self, stage: int, ms: float, replica: int | None = None) -> None:
+        """Record one measured wall time (ms) for ``stage``.
+
+        ``replica`` (replicated-stage executors) additionally attributes
+        the sample to that worker, so a straggling replica — one slow
+        thread among N serving a widened stage — is visible in
+        :meth:`snapshot` instead of being averaged away.  The per-stage
+        aggregate (what re-planning reads) always measures the *service*
+        time of one token group, whichever replica ran it.
+        """
         if not 0 <= stage < self.n_stages:
             raise IndexError(f"stage {stage} out of range [0, {self.n_stages})")
         ms = float(ms)
@@ -114,6 +126,12 @@ class StageProfiler:
                 else (1.0 - self.alpha) * prev + self.alpha * ms
             self._win[stage].append(ms)
             self._count[stage] += 1
+            if replica is not None:
+                rec = self._replica.setdefault((stage, int(replica)),
+                                               [0, None])
+                rec[0] += 1
+                rec[1] = ms if rec[1] is None \
+                    else (1.0 - self.alpha) * rec[1] + self.alpha * ms
 
     # -- queries --------------------------------------------------------------- #
     def samples(self, stage: int) -> int:
@@ -139,6 +157,18 @@ class StageProfiler:
             return None
         return self.percentile_ms(stage, 50.0)
 
+    def replica_ms(self, stage: int) -> dict[int, float]:
+        """Per-replica EMA wall times for one stage (replicated executors).
+
+        Empty for stages that never reported a replica index.  This is
+        *service* time per replica — the planner divides the stage median
+        by the replica count for throughput, but a per-replica spread here
+        flags a straggling worker thread.
+        """
+        with self._lock:
+            return {w: rec[1] for (s, w), rec in self._replica.items()
+                    if s == stage and rec[1] is not None}
+
     @property
     def ready(self) -> bool:
         """True once every stage has ``min_samples`` measurements."""
@@ -149,12 +179,19 @@ class StageProfiler:
         """Machine-readable per-stage profile (for stats endpoints)."""
         stages = []
         for k in range(self.n_stages):
-            stages.append({
+            entry = {
                 "samples": self.samples(k),
                 "ema_ms": _round(self.ema_ms(k)),
                 "p50_ms": _round(self.percentile_ms(k, 50.0)),
                 "p90_ms": _round(self.percentile_ms(k, 90.0)),
-            })
+            }
+            with self._lock:
+                reps = {str(w): {"samples": rec[0], "ema_ms": _round(rec[1])}
+                        for (s, w), rec in sorted(self._replica.items())
+                        if s == k}
+            if reps:
+                entry["replicas"] = reps
+            stages.append(entry)
         return {"n_stages": self.n_stages, "sample_every": self.sample_every,
                 "window": self.window, "per_stage": stages}
 
@@ -165,6 +202,7 @@ class StageProfiler:
                          for _ in range(self.n_stages)]
             self._count = [0] * self.n_stages
             self._ticks = 0
+            self._replica.clear()
 
     # -- cost-model write-back -------------------------------------------------- #
     def apply_to_ir(self, ir: "CourierIR", plan: "PipelinePlan", *,

@@ -318,9 +318,17 @@ class RequestQueueServer:
 
 def serve_pipeline_demo(n_requests: int = 64, max_batch: int = 8,
                         max_wait_ms: float = 4.0,
-                        size: tuple[int, int] = (64, 96)) -> dict:
-    """Smoke-servable demo: Harris pipeline behind the request queue."""
-    from repro.core import courier_offload
+                        size: tuple[int, int] = (64, 96),
+                        worker_budget: int | None = None) -> dict:
+    """Smoke-servable demo: Harris pipeline behind the request queue.
+
+    ``worker_budget`` serves the pipeline with replicated stages: the
+    planner's widening pass (:func:`repro.core.partition.assign_replicas`)
+    distributes the budget over the planned stage times and the executor
+    runs the widened stages on parallel worker threads, retiring requests
+    strictly in submission order.
+    """
+    from repro.core import assign_replicas, courier_offload
     from repro.core.tracer import Library
     from repro.models.harris import corner_harris_demo, make_harris_db
 
@@ -333,9 +341,16 @@ def serve_pipeline_demo(n_requests: int = 64, max_batch: int = 8,
     frames = [jax.random.uniform(jax.random.PRNGKey(i), (H, W, 3)) * 255
               for i in range(n_requests)]
     off = courier_offload(app, frames[0], db=db, prefer_hw=False)
+    replicas = None
+    if worker_budget is not None:
+        plan = assign_replicas(off.pipeline.plan, off.pipeline.ir,
+                               worker_budget=worker_budget)
+        if any(r > 1 for r in plan.replicas):
+            replicas = plan.replicas
     # pad_microbatches: ragged partial batches reuse the one compiled
     # [max_batch, ...] executable instead of compiling per batch size
-    ex = off.pipeline.executor(microbatch=max_batch, pad_microbatches=True)
+    ex = off.pipeline.executor(microbatch=max_batch, pad_microbatches=True,
+                               replicas=replicas)
     ex.warmup(frames[0])      # compile before latencies are measured
 
     with RequestQueueServer(ex, max_batch=max_batch,
@@ -357,12 +372,16 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=4.0)
+    ap.add_argument("--worker-budget", type=int, default=None,
+                    help="total stage workers; > n_stages widens "
+                         "(replicates) the bottleneck stages")
     args = ap.parse_args()
 
     if args.mode == "pipeline":
         stats = serve_pipeline_demo(n_requests=args.requests,
                                     max_batch=args.max_batch,
-                                    max_wait_ms=args.max_wait_ms)
+                                    max_wait_ms=args.max_wait_ms,
+                                    worker_budget=args.worker_budget)
         lat = stats["latency_ms"]
         print(f"[serve] pipeline mode: {stats['requests_served']} requests, "
               f"{stats['batches']} batches "

@@ -27,7 +27,8 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core.ir import CourierIR
-from repro.core.partition import PipelinePlan, partition_optimal
+from repro.core.partition import (PipelinePlan, StagePlan, assign_replicas,
+                                  partition_optimal)
 
 
 # --------------------------------------------------------------------------- #
@@ -68,12 +69,15 @@ class ReplanDecision:
     defused: list[str] = field(default_factory=list)   # fused nodes split
     plan: Any = None                  # new PipelinePlan (None if unchanged)
     executor: Any = None              # new executor (None if unchanged)
+    widened: bool = False             # won by replication, not re-balancing
+    replicas: list[int] | None = None  # chosen per-stage worker counts
 
     def describe(self) -> str:
         verdict = "REPLAN" if self.replanned else "keep"
         return (f"[{verdict}] {self.reason}: measured bottleneck "
                 f"{self.old_bottleneck_ms:.3f} ms -> predicted "
                 f"{self.new_bottleneck_ms:.3f} ms ({self.gain:.2f}x)"
+                + (f", replicas {self.replicas}" if self.widened else "")
                 + (f", defused {self.defused}" if self.defused else ""))
 
 
@@ -144,8 +148,23 @@ class ElasticPlanner:
         """Size of the cross-plan StageFn cache (observability)."""
         return len(self._stagefn_cache)
 
+    @staticmethod
+    def _cache_key(plan: PipelinePlan, replicas, max_in_flight, microbatch,
+                   jit, stage_workers, profiler) -> tuple:
+        """Executor-cache identity: plan shape + replicas + executor config.
+
+        Single source of truth for both :meth:`executor_for` and
+        :meth:`replan_from_profile` — a key-shape change that touched only
+        one site would silently serve stale (or needlessly rebuilt)
+        executors.
+        """
+        return (tuple(len(s.node_names) for s in plan.stages),
+                tuple(replicas) if replicas else None,
+                max_in_flight, microbatch, jit, stage_workers, id(profiler))
+
     def _build_executor(self, plan: PipelinePlan, *, max_in_flight, microbatch,
-                        jit, profiler=None, stage_workers=False) -> Any:
+                        jit, profiler=None, stage_workers=False,
+                        replicas=None) -> Any:
         from repro.core.executor import PipelineExecutor
         from repro.core.pipeline import assign_placements, make_stage_fns
 
@@ -156,12 +175,14 @@ class ElasticPlanner:
                                 self.layer_ir.graph_outputs,
                                 max_in_flight=max_in_flight,
                                 microbatch=microbatch, profiler=profiler,
-                                stage_workers=stage_workers)
+                                stage_workers=stage_workers,
+                                replicas=replicas)
 
     def executor_for(self, n_stages: int, *, max_in_flight: int | None = None,
                      microbatch: int = 1, jit: bool = True,
                      profiler: Any = None,
-                     stage_workers: bool = False) -> tuple[Any, bool]:
+                     stage_workers: bool = False,
+                     worker_budget: int | None = None) -> tuple[Any, bool]:
         """(executor, rebuilt) for a resource count of ``n_stages``.
 
         Re-partitions the IR for the new stage count; when the resulting
@@ -170,20 +191,30 @@ class ElasticPlanner:
         executor is returned (``rebuilt=True``).  An unchanged partition
         with the same config reuses the cached executor (``rebuilt=False``)
         — in-flight work and warm compilations survive the resize.
+
+        ``worker_budget`` widens stages beyond one worker each
+        (:func:`~repro.core.partition.assign_replicas` over the planned
+        stage times) and runs the executor in replicated mode.
         """
         if self.db is None:
             raise ValueError("ElasticPlanner needs a ModuleDatabase to build "
                              "executors; pass db= at construction")
         plan = self.plan(n_stages)
-        key = (tuple(len(s.node_names) for s in plan.stages),
-               max_in_flight, microbatch, jit, stage_workers, id(profiler))
+        replicas = None
+        if worker_budget is not None:
+            assign_replicas(plan, self.layer_ir, worker_budget=worker_budget)
+            if any(r > 1 for r in plan.replicas):
+                replicas = plan.replicas
+        key = self._cache_key(plan, replicas, max_in_flight, microbatch,
+                              jit, stage_workers, profiler)
         if self._cached is not None and self._cached[0] == key \
                 and not getattr(self._cached[1], "closed", False):
             return self._cached[1], False
         ex = self._build_executor(plan, max_in_flight=max_in_flight,
                                   microbatch=microbatch, jit=jit,
                                   profiler=profiler,
-                                  stage_workers=stage_workers)
+                                  stage_workers=stage_workers,
+                                  replicas=replicas)
         self._cached = (key, ex)
         self._current_plan = plan
         self.rebuilds += 1
@@ -198,6 +229,7 @@ class ElasticPlanner:
                             margin: float | None = None,
                             min_samples: int | None = None,
                             revisit_fusion: bool = True,
+                            worker_budget: int | None = None,
                             new_profiler: Any = None) -> ReplanDecision:
         """Profile-guided re-plan check: measured costs -> maybe new executor.
 
@@ -213,18 +245,29 @@ class ElasticPlanner:
            parts (:func:`~repro.core.partition.split_fused_node`), letting
            the partitioner place them in separate stages.
         4. **Re-balance** — ``partition_optimal`` over the measured costs
-           (``max_stages`` defaults to the current stage count).
-        5. **Hysteresis** — rebuild only when the predicted bottleneck
-           beats the *measured* bottleneck by ``min_gain`` AND the stage
-           boundaries actually changed; otherwise keep serving the current
-           executor.  Window medians + this threshold are what prevent
-           plan flapping under noisy timings.
+           (``max_stages`` defaults to the current stage count).  With a
+           ``worker_budget``, a second candidate **widens** the current
+           boundaries instead (:func:`~repro.core.partition.
+           assign_replicas` over the measured stage times — the TBB
+           parallel-filter move: multiply workers on the bottleneck stage
+           rather than move work off it), the re-balanced candidate is
+           widened too, and the plan whose *effective* (replication-aware)
+           bottleneck the cost model predicts smallest wins.  Ties go to
+           widening: unchanged boundaries mean every compiled StageFn is
+           reused, so the hot-swap costs zero recompiles.
+        5. **Hysteresis** — rebuild only when the predicted effective
+           bottleneck beats the *measured* effective bottleneck by
+           ``min_gain`` AND the plan (boundaries or replicas) actually
+           changed; otherwise keep serving the current executor.  Window
+           medians + this threshold are what prevent plan flapping under
+           noisy timings.
 
         The new executor shares the planner's StageFn cache, so stages with
         unchanged boundaries keep their compiled executables (bounded
         recompiles during the serving layer's hot-swap).
         """
-        from repro.core.costmodel import measured_contradicts
+        from repro.core.costmodel import (measured_contradicts,
+                                          replicated_bottleneck_ms)
         from repro.core.partition import split_fused_node
 
         if self.db is None:
@@ -259,7 +302,10 @@ class ElasticPlanner:
                     for k in range(plan.n_stages)]
         if any(m is None for m in measured):
             return keep("insufficient profile", 0.0)
-        old_bottleneck = max(measured)
+        # the profiler measures per-invocation SERVICE time; a stage already
+        # replicated r-wide retires tokens at service/r, so the baseline the
+        # candidates must beat is the effective period
+        old_bottleneck = replicated_bottleneck_ms(measured, plan.replicas)
 
         # 2) measured costs supersede the model (in-place: time_ms only,
         #    so the current plan's node names stay valid either way).
@@ -285,40 +331,71 @@ class ElasticPlanner:
                     ir = split_fused_node(ir, n.name)
                     defused.append(n.name)
 
-        # 4) re-balance on measured costs
+        # 4) re-balance on measured costs — and, under a worker budget, the
+        #    competing widen-in-place candidate (same boundaries, replicated
+        #    bottleneck stage).  The cost model's effective bottleneck picks
+        #    the winner.
         new_plan = partition_optimal(
             ir,
             max_stages=max_stages if max_stages is not None else plan.n_stages)
+        chosen, widened = new_plan, False
+        if worker_budget is not None:
+            assign_replicas(new_plan, ir, worker_budget=worker_budget)
+            widen = PipelinePlan(
+                stages=[StagePlan(node_names=list(s.node_names),
+                                  est_time_ms=float(m), kind=s.kind,
+                                  placements=list(s.placements),
+                                  comm_in_bytes=s.comm_in_bytes)
+                        for s, m in zip(plan.stages, measured)],
+                policy="widen")
+            # widening never moves boundaries, so serial_only markers are
+            # checked against the CURRENT (possibly still-fused) IR
+            assign_replicas(widen, self.layer_ir, worker_budget=worker_budget)
+            if widen.effective_bottleneck_ms \
+                    <= new_plan.effective_bottleneck_ms * (1.0 + 1e-9):
+                chosen, widened = widen, True
 
-        # 5) hysteresis
-        same_boundaries = (
-            not defused
-            and [s.node_names for s in new_plan.stages]
-            == [s.node_names for s in plan.stages])
-        if same_boundaries:
+        # 5) hysteresis (plan identity = boundaries AND replicas)
+        same_plan = (
+            (widened or not defused)
+            and [s.node_names for s in chosen.stages]
+            == [s.node_names for s in plan.stages]
+            and chosen.replicas == plan.replicas)
+        if same_plan:
             return keep("plan unchanged", old_bottleneck)
-        gain = old_bottleneck / max(new_plan.bottleneck_ms, 1e-12)
+        new_bottleneck = chosen.effective_bottleneck_ms
+        gain = old_bottleneck / max(new_bottleneck, 1e-12)
         if gain < min_gain:
             return keep(f"gain {gain:.2f}x below hysteresis threshold "
                         f"{min_gain:.2f}x", old_bottleneck,
-                        new_plan.bottleneck_ms, defused)
+                        new_bottleneck, defused if not widened else [])
 
         prof = new_profiler
         if prof is None and hasattr(profiler, "clone_for"):
-            prof = profiler.clone_for(new_plan.n_stages)
-        self.layer_ir = ir                # commit the (possibly defused) IR
-        ex = self._build_executor(plan=new_plan, max_in_flight=max_in_flight,
+            prof = profiler.clone_for(chosen.n_stages)
+        if not widened:
+            self.layer_ir = ir            # commit the (possibly defused) IR
+        else:
+            defused = []                  # widening kept the fused stages
+        replicas = chosen.replicas if any(r > 1 for r in chosen.replicas) \
+            else None
+        ex = self._build_executor(plan=chosen, max_in_flight=max_in_flight,
                                   microbatch=microbatch, jit=jit,
-                                  profiler=prof, stage_workers=stage_workers)
-        key = (tuple(len(s.node_names) for s in new_plan.stages),
-               max_in_flight, microbatch, jit, stage_workers, id(prof))
+                                  profiler=prof, stage_workers=stage_workers,
+                                  replicas=replicas)
+        key = self._cache_key(chosen, replicas, max_in_flight, microbatch,
+                              jit, stage_workers, prof)
         self._cached = (key, ex)
-        self._current_plan = new_plan
+        self._current_plan = chosen
         self.rebuilds += 1
         self.replans += 1
-        d = ReplanDecision(True, "measured costs re-balanced the plan",
-                           old_bottleneck, new_plan.bottleneck_ms, gain,
-                           defused, new_plan, ex)
+        d = ReplanDecision(
+            True,
+            "measured costs widened the bottleneck stage" if widened
+            else "measured costs re-balanced the plan",
+            old_bottleneck, new_bottleneck, gain,
+            defused, chosen, ex, widened=widened,
+            replicas=list(chosen.replicas))
         self.last_decision = d
         return d
 

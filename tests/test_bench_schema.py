@@ -56,6 +56,18 @@ SCHEMA = {
             "recompiles_after_warmup": int,
         },
     },
+    "replicate": {
+        "sim": {
+            "tps_serial": NUM, "tps_replicated": NUM, "speedup": NUM,
+            "widened": bool, "replicas": list, "worker_budget": int,
+            "out_of_order": int,
+        },
+        "hot_swap": {
+            "requests": int, "served": int, "dropped": int, "swaps": int,
+            "recompiles_after_warmup": int, "replicas": list,
+            "out_of_order": int,
+        },
+    },
 }
 
 
@@ -103,6 +115,11 @@ def test_committed_bench_json_matches_schema():
     assert data["replan"]["sim"]["recovery"] >= 1.3
     assert data["replan"]["hot_swap"]["dropped"] == 0
     assert data["replan"]["hot_swap"]["recompiles_after_warmup"] == 0
+    assert data["replicate"]["sim"]["speedup"] >= 1.5
+    assert data["replicate"]["sim"]["out_of_order"] == 0
+    assert data["replicate"]["hot_swap"]["dropped"] == 0
+    assert data["replicate"]["hot_swap"]["out_of_order"] == 0
+    assert data["replicate"]["hot_swap"]["recompiles_after_warmup"] == 0
     assert data["tokens_per_sec"]["sequential"] > 0
 
 

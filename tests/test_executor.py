@@ -163,7 +163,9 @@ def test_padded_microbatch_equivalence_and_no_ragged_groups():
     s = ex.stats()
     # padding rows never count as tokens
     assert s.tokens_admitted == s.tokens_retired == 7
-    assert s.groups_admitted == 3                 # [3], [3], [1 padded to 3]
+    # [3], [3], [1] — the singleton tail is never padded (the per-token
+    # executables are always warm, so padding would only waste compute)
+    assert s.groups_admitted == 3
 
 
 def test_submit_many_rejects_bad_arity_before_admitting():

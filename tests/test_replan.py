@@ -433,6 +433,37 @@ def test_hot_swap_zero_drops_identical_results_bounded_compiles():
     assert pipe.compile_count() == compiles_warm
 
 
+def test_hot_swap_serial_to_replicated_mid_stream():
+    """Swap a serial executor for a REPLICATED one mid-stream: zero drops,
+    identical in-order results, zero new compiles (widening keeps every
+    stage boundary, so every StageFn and vmapped executable is reused)."""
+    pipe = _jit_pipe()
+    toks = [jnp.full((4,), float(i + 1)) for i in range(24)]
+    want = pipe.run_sequential(toks)
+
+    ex_serial = pipe.executor(max_in_flight=6, microbatch=2,
+                              pad_microbatches=True)
+    ex_serial.warmup(toks[0])
+    compiles_warm = pipe.compile_count()
+
+    with RequestQueueServer(ex_serial, max_batch=2, max_wait_ms=2.0) as srv:
+        reqs = [srv.submit(t) for t in toks[:12]]
+        ex_rep = pipe.executor(microbatch=2, pad_microbatches=True,
+                               replicas=[1, 3, 1, 1][: len(pipe.stage_fns)])
+        old = srv.swap_executor(ex_rep, warm_args=(toks[0],))
+        assert old is ex_serial and srv.executor is ex_rep
+        reqs += [srv.submit(t) for t in toks[12:]]
+        got = [r.wait(timeout=60.0) for r in reqs]      # zero drops
+
+    for g, w in zip(got, want):                          # identical results
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-6)
+    assert (ex_serial.stats().tokens_retired
+            + ex_rep.stats().tokens_retired) == 24
+    assert ex_rep.stats().out_of_order_retired == 0      # in-order retirement
+    assert pipe.compile_count() == compiles_warm         # zero new executables
+    ex_rep.close()
+
+
 def test_hot_swap_outside_serving_loop_is_immediate():
     pipe = _jit_pipe()
     ex_a = pipe.executor()
