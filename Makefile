@@ -14,7 +14,7 @@ test-fast:       ## fast split (excludes @slow: subprocess/multi-device/soak tes
 bench:           ## all paper tables + fusion + replan + replicate benchmarks; writes BENCH_pipeline.json
 	PYTHONPATH=$(PYPATH) $(PY) benchmarks/run.py
 
-bench-smoke:     ## 2-token pipeline + fusion + replan + replicate (stage replication) smoke benchmark
+bench-smoke:     ## 2-token pipeline + fusion + replan + replicate + devices (multi-device placement) smoke benchmark
 	PYTHONPATH=$(PYPATH) $(PY) benchmarks/run.py --smoke
 
 ci: test-fast bench-smoke  ## single CI entry point: fast tests, then smoke benchmark

@@ -1,0 +1,295 @@
+"""Multi-device stage replication benchmark — N replicas on N devices.
+
+PR 4 widened a bottleneck stage across *host threads*; the structured
+placement layer maps those replicas onto genuine device parallelism: the
+planner consumes a :class:`~repro.core.placement.DeviceInventory`, pins
+each replica of a widened stage to its own chip/core, and the executor
+``jax.device_put``\\ s every replica's token groups onto its device.  This
+benchmark exercises the whole device-pinned path on a **forced 4-host-
+device** jax (``XLA_FLAGS=--xla_force_host_platform_device_count=4``,
+``JAX_PLATFORMS=cpu``) in a subprocess, since the parent process's jax is
+already initialized single-device:
+
+1. **Pinning** — a stage replicated 4-wide over devices ``[0,1,2,3]``:
+   token ``i`` is served by replica ``i % 4``, so the committed result
+   arrays' ``.devices()`` must cycle through all four devices (the
+   acceptance audit: each replica on a *distinct* device).
+2. **Simulation** — a 3-function chain with ONE dominant stage (a fixed
+   per-call latency around real jnp device work — the accelerator-module
+   stand-in).  The serial plan is measured against the inventory-widened
+   plan (dominant stage 4-wide on 4 devices).  Acceptance: **>= 1.5x
+   tokens/s**, zero out-of-order retirements, cross-device stage
+   boundaries charged their transfer cost.
+3. **Hot-swap** — mid-stream serial → multi-device executor swap behind
+   :class:`~repro.launch.serve.RequestQueueServer`: zero dropped requests.
+
+Feeds the ``devices`` section of ``BENCH_pipeline.json``; the slow split
+of ``tests/test_devices.py`` asserts the same payload.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_DEVICES = 4
+# One dominant device-backed stage.  The dominant latency is deliberately
+# large relative to jax's per-op dispatch overhead on committed (non-
+# default-device) arrays — on a small shared host that slow-path dispatch
+# costs ~1-5 ms per op under thread contention, which the serial baseline
+# (default device, fast path) never pays; a 60 ms module keeps the
+# comparison about device parallelism, not dispatch-path asymmetry.
+STAGE_MS = [2.0, 60.0, 2.0]
+WORKER_BUDGET = 6                        # -> replicas [1, 4, 1]
+IO_SHAPE = (64,)                         # small tokens: staging off the path
+MARKER = "DEVICES-JSON:"
+
+
+# --------------------------------------------------------------------------- #
+# Child (runs under the forced multi-device jax)
+# --------------------------------------------------------------------------- #
+def _make_db_and_ir():
+    import time
+
+    import jax.numpy as jnp
+
+    from repro.core import ModuleDatabase, linear_ir
+
+    keys = [f"f{i}" for i in range(len(STAGE_MS))]
+    delays = dict(zip(keys, STAGE_MS))
+    db = ModuleDatabase("devices")
+    for k in keys:
+        def impl(x, _k=k):
+            # fixed per-call latency (the predefined accelerator module's
+            # service time) around real jnp work committed to whatever
+            # device the executor staged ``x`` onto
+            time.sleep(delays[_k] / 1e3)
+            return jnp.asarray(x) + 1.0
+        impl.__name__ = k
+        db.register(k, software=impl)
+    ir = linear_ir("devices", keys, list(STAGE_MS), io_shape=IO_SHAPE)
+    return db, ir
+
+
+def _tps(executor, tokens) -> float:
+    import time
+
+    t0 = time.perf_counter()
+    executor.run(tokens)
+    return len(tokens) / max(time.perf_counter() - t0, 1e-9)
+
+
+def _pinning_check() -> dict:
+    """Replicated stage over explicit devices: results commit per replica."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import DeviceInventory
+    from repro.core.executor import PipelineExecutor
+
+    inv = DeviceInventory.detect()
+    n = len(inv)
+    ex = PipelineExecutor([lambda env: {"y": env["x"] * 2.0}], ["x"], ["y"],
+                          replicas=[n], devices=[list(range(n))],
+                          inventory=inv, max_in_flight=2 * n)
+    handles = ex.submit_many([(jnp.full((8,), float(i)),)
+                              for i in range(2 * n)])
+    seen: list[int] = []
+    for i, h in enumerate(handles):
+        out = h.result()
+        np.testing.assert_allclose(np.asarray(out), float(i) * 2.0)
+        (dev,) = out.devices()               # committed, exactly one device
+        assert dev is inv.jax_device(i % n), \
+            f"token {i} retired on {dev}, expected replica {i % n}'s device"
+        seen.append(int(dev.id))
+    ooo = ex.stats().out_of_order_retired
+    ex.close()
+    return {"result_devices": seen, "distinct": len(set(seen)),
+            "out_of_order": int(ooo)}
+
+
+def _simulate(n_tokens: int) -> dict:
+    import numpy as np
+
+    from repro.core import DeviceInventory, StageProfiler, transfer_ms
+    from repro.runtime import ElasticPlanner
+
+    db, ir = _make_db_and_ir()
+    inv = DeviceInventory.detect()
+    planner = ElasticPlanner(ir, db=db, inventory=inv)
+    n = len(STAGE_MS)
+    toks = [np.full(IO_SHAPE, float(i), np.float32) for i in range(n_tokens)]
+
+    # serial baseline: worker_budget == n_stages -> no widening
+    ex_serial, _ = planner.executor_for(n, jit=False, stage_workers=True,
+                                        worker_budget=n,
+                                        max_in_flight=2 * n + 2)
+    tps_serial = _tps(ex_serial, toks)
+    ex_serial.close()
+
+    prof = StageProfiler(n, min_samples=1)
+    ex_rep, rebuilt = planner.executor_for(
+        n, jit=False, worker_budget=WORKER_BUDGET, profiler=prof,
+        max_in_flight=2 * WORKER_BUDGET + 2)
+    assert rebuilt
+    plan = planner.current_plan
+    wide = max(plan.stages, key=lambda s: s.est_time_ms)
+    tps_rep = _tps(ex_rep, toks)
+    st = ex_rep.stats()
+    snap = prof.snapshot()
+    wide_idx = plan.stages.index(wide)
+    devices_profiled = len(snap["per_stage"][wide_idx].get("devices", {}))
+    ex_rep.close()
+
+    # cross-device boundary transfer accounting: every stage whose device
+    # set differs from its predecessor's is charged its comm bytes
+    xfer_ok = True
+    for a, b in zip(plan.stages[:-1], plan.stages[1:]):
+        if set(a.devices) != set(b.devices) and b.comm_in_bytes > 0:
+            want = transfer_ms(b.comm_in_bytes,
+                               inv.device_class(0).xfer_bw)
+            xfer_ok &= abs(b.xfer_in_ms - want) < 1e-9
+        else:
+            xfer_ok &= b.xfer_in_ms == 0.0
+    return {
+        "n_devices": len(inv), "stage_ms": list(STAGE_MS),
+        "worker_budget": WORKER_BUDGET, "n_tokens": n_tokens,
+        "tps_serial": round(tps_serial, 2),
+        "tps_replicated": round(tps_rep, 2),
+        "speedup": round(tps_rep / max(tps_serial, 1e-9), 3),
+        "replicas": list(plan.replicas),
+        "bottleneck_devices": list(wide.devices),
+        "distinct_devices": len(set(wide.devices)),
+        "devices_profiled": int(devices_profiled),
+        "xfer_accounted": bool(xfer_ok),
+        "out_of_order": int(st.out_of_order_retired),
+    }
+
+
+def _hot_swap(n_requests: int) -> dict:
+    import numpy as np
+
+    from repro.core import DeviceInventory
+    from repro.launch.serve import RequestQueueServer
+    from repro.runtime import ElasticPlanner
+
+    db, ir = _make_db_and_ir()
+    inv = DeviceInventory.detect()
+    planner = ElasticPlanner(ir, db=db, inventory=inv)
+    n = len(STAGE_MS)
+    frames = [np.full(IO_SHAPE, float(i), np.float32)
+              for i in range(n_requests)]
+    ex_serial, _ = planner.executor_for(n, jit=False, stage_workers=True,
+                                        worker_budget=n,
+                                        max_in_flight=2 * n + 2)
+    with RequestQueueServer(ex_serial, max_batch=1, max_wait_ms=1.0) as srv:
+        reqs = [srv.submit(f) for f in frames[: n_requests // 2]]
+        ex_rep, _ = planner.executor_for(
+            n, jit=False, worker_budget=WORKER_BUDGET,
+            max_in_flight=2 * WORKER_BUDGET + 2)
+        srv.swap_executor(ex_rep)
+        reqs += [srv.submit(f) for f in frames[n_requests // 2:]]
+        served = dropped = 0
+        for i, r in enumerate(reqs):
+            try:
+                out = r.wait(timeout=300.0)
+                np.testing.assert_allclose(np.asarray(out).ravel()[0],
+                                           float(i) + n)
+                served += 1
+            except Exception:
+                dropped += 1
+    ooo = (ex_serial.stats().out_of_order_retired
+           + ex_rep.stats().out_of_order_retired)
+    ex_rep.close()
+    ex_serial.close()
+    return {"requests": n_requests, "served": served, "dropped": dropped,
+            "swaps": srv.swaps, "out_of_order": int(ooo)}
+
+
+def _child_main(smoke: bool) -> None:
+    import jax
+
+    assert len(jax.devices()) == N_DEVICES, \
+        f"forced host device count not applied: {jax.devices()}"
+    result = {
+        "pinning": _pinning_check(),
+        "sim": _simulate(n_tokens=16 if smoke else 32),
+        "hot_swap": _hot_swap(n_requests=12 if smoke else 24),
+    }
+    print(MARKER + json.dumps(result))
+
+
+# --------------------------------------------------------------------------- #
+# Parent (spawns the forced multi-device child)
+# --------------------------------------------------------------------------- #
+def _spawn(smoke: bool) -> dict:
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (flags + " " if flags else "") + \
+        f"--xla_force_host_platform_device_count={N_DEVICES}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), ROOT]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    cmd = [sys.executable, "-m", "benchmarks.devices", "--child"]
+    if smoke:
+        cmd.append("--smoke")
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=600,
+                       env=env, cwd=ROOT)
+    for line in r.stdout.splitlines():
+        if line.startswith(MARKER):
+            return json.loads(line[len(MARKER):])
+    raise RuntimeError(
+        f"multi-device child emitted no payload (exit {r.returncode}):\n"
+        f"{r.stdout[-1000:]}\n{r.stderr[-2000:]}")
+
+
+_payload_cache: dict = {}
+
+
+def payload(smoke: bool = False) -> dict:
+    key = bool(smoke)
+    if key not in _payload_cache:
+        _payload_cache[key] = _spawn(smoke)
+    return _payload_cache[key]
+
+
+def run(smoke: bool = False) -> list:
+    p = payload(smoke=smoke)
+    sim, pin, hs = p["sim"], p["pinning"], p["hot_swap"]
+    return [
+        ("devices.pinning.distinct", pin["distinct"],
+         f"result arrays committed across {pin['distinct']} devices "
+         f"(acceptance {N_DEVICES})"),
+        ("devices.sim.tps_serial", sim["tps_serial"],
+         f"{len(sim['stage_ms'])} stages; dominant "
+         f"{max(sim['stage_ms'])} ms; serial on 1 device"),
+        ("devices.sim.tps_replicated", sim["tps_replicated"],
+         f"replicas {sim['replicas']} on devices "
+         f"{sim['bottleneck_devices']}"),
+        ("devices.sim.speedup", sim["speedup"],
+         "multi-device vs serial tokens/s (acceptance >= 1.5)"),
+        ("devices.sim.distinct_devices", sim["distinct_devices"],
+         "distinct devices pinned under the bottleneck stage"),
+        ("devices.sim.out_of_order", sim["out_of_order"],
+         "retirements out of submission order (acceptance 0)"),
+        ("devices.hot_swap.dropped", hs["dropped"],
+         f"{hs['served']}/{hs['requests']} served across "
+         f"{hs['swaps']} serial->multi-device swap(s)"),
+    ]
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    if "--child" in argv:
+        _child_main(smoke="--smoke" in argv)
+        return
+    for row in run(smoke="--smoke" in argv):
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

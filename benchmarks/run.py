@@ -33,9 +33,9 @@ def _emit(mod) -> None:
 
 
 def main() -> None:
-    from benchmarks import (fig4_callgraph, fusion, replan, replicate,
-                            roofline, table1_pipeline, table2_modules,
-                            table3_resources)
+    from benchmarks import (devices, fig4_callgraph, fusion, replan,
+                            replicate, roofline, table1_pipeline,
+                            table2_modules, table3_resources)
 
     smoke = "--smoke" in sys.argv[1:]
     print("name,value,derived")
@@ -66,6 +66,14 @@ def main() -> None:
                   f"{wide['hot_swap']['served']} served; "
                   f"{wide['hot_swap']['recompiles_after_warmup']} recompiles; "
                   f"{wide['sim']['out_of_order']} out-of-order")
+            dev = devices.payload(smoke=True)
+            dv = str(dev['sim']['bottleneck_devices']).replace(",", ";")
+            print(f"smoke.devices.speedup,{dev['sim']['speedup']},"
+                  f"multi-device {dev['sim']['tps_replicated']} tps vs serial "
+                  f"{dev['sim']['tps_serial']} tps; devices {dv}")
+            print(f"smoke.devices.pinned,{dev['sim']['distinct_devices']},"
+                  f"{dev['pinning']['distinct']} distinct committed devices; "
+                  f"{dev['hot_swap']['dropped']} dropped across swap")
             path = table1_pipeline.write_bench_json(smoke=True)
             print(f"smoke.bench_json,0,{path}")
         except Exception as e:
@@ -74,10 +82,12 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
             sys.exit(1)
         return
-    # replan/replicate last: their thread pools and serving loops are the
-    # noisiest neighbors for the wall-clock benchmarks that precede them
+    # replan/replicate/devices last: their thread pools, serving loops, and
+    # subprocesses are the noisiest neighbors for the wall-clock benchmarks
+    # that precede them
     for mod in (table1_pipeline, table2_modules, table3_resources,
-                fig4_callgraph, fusion, roofline, replan, replicate):
+                fig4_callgraph, fusion, roofline, replan, replicate,
+                devices):
         _emit(mod)
     try:
         path = table1_pipeline.write_bench_json()

@@ -177,7 +177,7 @@ def bench_payload(smoke: bool = False) -> dict:
     """sequential / wavefront / async / fused tokens-per-sec + bottleneck ms,
     plus the fusion, adaptive-replan, and stage-replication benchmarks —
     the perf trajectory tracked across PRs."""
-    from benchmarks import fusion, replan, replicate
+    from benchmarks import devices, fusion, replan, replicate
 
     n_frames = 2 if smoke else 12
     size = (64, 96) if smoke else (270, 480)
@@ -189,6 +189,7 @@ def bench_payload(smoke: bool = False) -> dict:
     m = measured_numbers(n_frames=n_frames, hw=True, size=size)
     rep = replan.payload(smoke=smoke)
     wide = replicate.payload(smoke=smoke)
+    dev = devices.payload(smoke=smoke)
     return {
         "bench": "table1_pipeline", "smoke": bool(smoke),
         "shape": m["shape"], "n_frames": m["n_frames"],
@@ -210,6 +211,7 @@ def bench_payload(smoke: bool = False) -> dict:
         "fusion": fus,
         "replan": rep,
         "replicate": wide,
+        "devices": dev,
     }
 
 

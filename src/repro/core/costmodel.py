@@ -33,6 +33,62 @@ MXU_TILE = (128, 128)           # systolic array tile
 LANE = 128                      # vector lane width
 SUBLANE = 8
 
+# Host <-> device (and device <-> device via host) staging bandwidth used to
+# charge stage boundaries whose producer and consumer sit on different
+# devices — the paper's "communication frequency of intermediate data"
+# term, now with a real bandwidth attached (PCIe gen4 x16 ballpark).
+HOST_XFER_BW = 16e9             # bytes/s
+
+
+# --------------------------------------------------------------------------- #
+# Device classes — per-device-class roofline constants
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class DeviceClass:
+    """Roofline constants for one class of placeable device.
+
+    The paper costs a hardware module against the synthesis report of the
+    *target FPGA part*; here every :class:`~repro.core.placement.
+    DeviceSpec` maps to a class so a replica assigned to device ``k`` is
+    costed against that device's constants instead of a single global
+    TPU-v5e table (a CPU-class replica of the same stage is much slower,
+    and the planner should know).
+    """
+
+    name: str
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW_PER_LINK
+    xfer_bw: float = HOST_XFER_BW       # host<->device staging bandwidth
+    vmem_bytes: int = VMEM_BYTES
+
+
+DEVICE_CLASSES: dict[str, DeviceClass] = {
+    "tpu": DeviceClass("tpu"),
+    # A100-ish ballpark: ~2x the v5e HBM bw, ~1.6x bf16 flops
+    "gpu": DeviceClass("gpu", peak_flops=312e12, hbm_bw=1.6e12,
+                       ici_bw=300e9),
+    # one beefy host core + DDR: the "software filter on a CPU core" class
+    "cpu": DeviceClass("cpu", peak_flops=1e11, hbm_bw=3e10, ici_bw=1e10,
+                       xfer_bw=30e9, vmem_bytes=32 * 1024**2),
+}
+
+
+def device_class(platform: str) -> DeviceClass:
+    """Roofline constants for a platform name (unknown → TPU defaults)."""
+    return DEVICE_CLASSES.get(str(platform).lower(), DEVICE_CLASSES["tpu"])
+
+
+def transfer_ms(nbytes: float, bw_bytes_per_s: float = HOST_XFER_BW) -> float:
+    """Wall ms to move ``nbytes`` across a stage boundary that changes
+    device — one staging hop at the slower side's transfer bandwidth."""
+    if nbytes <= 0:
+        return 0.0
+    if bw_bytes_per_s <= 0:
+        raise ValueError(f"transfer bandwidth must be > 0 "
+                         f"(got {bw_bytes_per_s})")
+    return 1e3 * float(nbytes) / float(bw_bytes_per_s)
+
 
 @dataclass
 class NodeCost:
@@ -43,12 +99,19 @@ class NodeCost:
     coll_bytes: float = 0.0          # inter-chip bytes over ICI
     measured_ms: float | None = None  # Frontend profile, wins when present
 
-    def time_ms(self, chips: int = 1, ici_links: int = 1) -> float:
+    def time_ms(self, chips: int = 1, ici_links: int = 1,
+                device: DeviceClass | None = None) -> float:
+        """Roofline time; ``device`` costs against that device class's
+        constants instead of the global TPU-v5e table (measured times
+        still win — a profile is of the device that ran it)."""
         if self.measured_ms is not None:
             return self.measured_ms
-        t_compute = self.flops / (chips * PEAK_FLOPS_BF16)
-        t_memory = self.bytes_rw / (chips * HBM_BW)
-        t_coll = self.coll_bytes / (chips * ici_links * ICI_BW_PER_LINK)
+        peak = device.peak_flops if device is not None else PEAK_FLOPS_BF16
+        hbm = device.hbm_bw if device is not None else HBM_BW
+        ici = device.ici_bw if device is not None else ICI_BW_PER_LINK
+        t_compute = self.flops / (chips * peak)
+        t_memory = self.bytes_rw / (chips * hbm)
+        t_coll = self.coll_bytes / (chips * ici_links * ici)
         return 1e3 * (max(t_compute, t_memory) + t_coll)
 
     @property
@@ -199,7 +262,9 @@ def attention_cost(batch: int, q_len: int, kv_len: int, heads: int,
 # Stage replication (TBB parallel filters — widen instead of re-balance)
 # --------------------------------------------------------------------------- #
 def replicated_bottleneck_ms(stage_ms: "Sequence[float]",
-                             replicas: "Sequence[int]") -> float:
+                             replicas: "Sequence[int]",
+                             speeds: "Sequence[Sequence[float]] | None" = None,
+                             ) -> float:
     """Predicted steady-state token period of a replicated pipeline plan.
 
     A stage whose one-worker service time is ``t`` and which runs ``r``
@@ -211,14 +276,38 @@ def replicated_bottleneck_ms(stage_ms: "Sequence[float]",
     bottleneck.  Host-side hand-off overhead is deliberately folded into
     the measured ``stage_ms`` (the profiler times the whole stage
     invocation), not modeled separately.
+
+    ``speeds`` (optional) carries one relative-throughput factor per
+    replica per stage (device-aware planning: a replica pinned to a
+    faster device class drains more than ``1/r`` of the stream).  Stage
+    ``k``'s aggregate rate is ``sum_j speed_kj / t_k``, so its period is
+    ``t_k / sum_j speed_kj`` — equal to ``t_k / r_k`` when every replica
+    runs at the class baseline.  An empty per-stage entry means
+    "homogeneous at speed 1".
     """
     if len(stage_ms) != len(replicas):
         raise ValueError(f"{len(stage_ms)} stage times vs "
                          f"{len(replicas)} replica counts")
+    if speeds is not None and len(speeds) != len(stage_ms):
+        raise ValueError(f"{len(stage_ms)} stage times vs "
+                         f"{len(speeds)} speed vectors")
     if not stage_ms:
         return 0.0
-    return max(float(t) / max(int(r), 1)
-               for t, r in zip(stage_ms, replicas))
+    period = 0.0
+    for k, (t, r) in enumerate(zip(stage_ms, replicas)):
+        r = max(int(r), 1)
+        sp = list(speeds[k]) if speeds is not None and speeds[k] else None
+        if sp is not None:
+            if len(sp) != r:
+                raise ValueError(f"stage {k}: {len(sp)} replica speeds "
+                                 f"for {r} replicas")
+            if any(s <= 0 for s in sp):
+                raise ValueError(f"stage {k}: replica speeds must be > 0")
+            rate = sum(sp)
+        else:
+            rate = float(r)
+        period = max(period, float(t) / rate)
+    return period
 
 
 # --------------------------------------------------------------------------- #

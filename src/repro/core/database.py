@@ -18,6 +18,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable
 
 from .costmodel import NodeCost
+from .placement import HW, SW
 
 
 @dataclass
@@ -164,8 +165,8 @@ class ModuleDatabase:
         if e is None:
             raise KeyError(f"{name!r} not in module database {self.name!r}")
         if prefer_hw and e.has_hw(*shape_args):
-            return e.accelerated, "hw"
-        return e.software, "sw"
+            return e.accelerated, HW
+        return e.software, SW
 
     def names(self) -> list[str]:
         return sorted(self.entries)

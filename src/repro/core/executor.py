@@ -98,14 +98,24 @@ class StageCounters:
     issued: int = 0        # stage invocations (one per token group)
     tokens: int = 0        # tokens pushed through this stage
     issue_ms: float = 0.0  # host time spent dispatching this stage
-    exec_ms: float = 0.0   # measured stage wall time (threaded/sampled only)
+    # measured stage-body wall time (threaded/sampled only); disjoint from
+    # xfer_ms — exec_ms + xfer_ms is the stage's full service time
+    exec_ms: float = 0.0
+    xfer_ms: float = 0.0   # host time staging groups onto pinned devices
     replicas: int = 1      # worker threads serving this stage
+    # CONFIGURED per-replica device ordinals (empty = unpinned).  This
+    # echoes the plan; when the executor degraded to a single device the
+    # pinning is not in effect (xfer_ms stays 0 and profiler samples carry
+    # no device ordinal).
+    devices: list = field(default_factory=list)
 
     def as_dict(self) -> dict:
         return {"issued": self.issued, "tokens": self.tokens,
                 "issue_ms": round(self.issue_ms, 4),
                 "exec_ms": round(self.exec_ms, 4),
-                "replicas": self.replicas}
+                "xfer_ms": round(self.xfer_ms, 4),
+                "replicas": self.replicas,
+                "devices": list(self.devices)}
 
 
 @dataclass
@@ -343,6 +353,22 @@ class PipelineExecutor:
         :func:`repro.core.partition.assign_replicas` to pick the factors
         from measured stage costs.  All-ones is the serial threaded model
         on the ring dataflow.
+    devices:
+        Per-stage per-replica device ordinals (the planner's
+        :meth:`~repro.core.partition.PipelinePlan.stage_devices`): replica
+        ``w`` of stage ``s`` ``jax.device_put``\\ s its slot-ring groups
+        onto device ``devices[s][w]`` before running the stage, so a
+        widened stage's replicas execute on N distinct chips/cores — the
+        thread-pool widening becomes real multi-device parallelism (the
+        jitted stage compiles one executable per device it runs on, keyed
+        by the committed inputs).  Requires ``replicas``; row ``s`` must
+        have ``replicas[s]`` entries.  When every ordinal maps to one
+        device (single-device hosts, planning-only inventories) the
+        staging hop is skipped entirely — today's behavior.
+    inventory:
+        The :class:`~repro.core.placement.DeviceInventory` that maps
+        ordinals to ``jax.Device`` objects; defaults to
+        ``DeviceInventory.detect()`` when ``devices`` is given.
     """
 
     def __init__(self, stage_fns: Sequence[Callable],
@@ -352,7 +378,9 @@ class PipelineExecutor:
                  buckets: Sequence[int] | None = None,
                  batched_fns: Sequence[Callable] | None = None,
                  profiler: Any = None, stage_workers: bool = False,
-                 replicas: Sequence[int] | None = None):
+                 replicas: Sequence[int] | None = None,
+                 devices: Sequence[Sequence[int]] | None = None,
+                 inventory: Any = None):
         if max_in_flight is not None and max_in_flight < 1:
             raise ValueError(
                 f"max_in_flight must be >= 1 (got {max_in_flight}); "
@@ -372,6 +400,28 @@ class PipelineExecutor:
             if any(r < 1 for r in reps):
                 raise ValueError(f"replica counts must be >= 1 (got {reps})")
             self.replicas = reps
+        self.devices: list[list[int]] | None = None
+        self._replica_devs: list[list[Any]] | None = None
+        if devices is not None:
+            if self.replicas is None:
+                raise ValueError("devices= requires replicas= (pass all-ones "
+                                 "for a serial device-pinned pipeline)")
+            devs = [[int(d) for d in row] for row in devices]
+            if len(devs) != len(self.replicas) or any(
+                    len(row) != r for row, r in zip(devs, self.replicas)):
+                raise ValueError(
+                    f"devices must carry one ordinal per replica per stage: "
+                    f"got {[len(r) for r in devs]} for replicas "
+                    f"{self.replicas}")
+            self.devices = devs
+            if inventory is None:
+                from .placement import DeviceInventory
+                inventory = DeviceInventory.detect()
+            mapped = [[inventory.jax_device(d) for d in row] for row in devs]
+            # single-device degrade: when every ordinal maps to one (or no)
+            # jax device there is nothing to stage — skip the puts entirely
+            distinct = {d for row in mapped for d in row if d is not None}
+            self._replica_devs = mapped if len(distinct) > 1 else None
         if max_in_flight is not None:
             self.pool = max_in_flight
         elif self.replicas is not None:
@@ -427,7 +477,9 @@ class PipelineExecutor:
 
     def _fresh_counters(self) -> list[StageCounters]:
         reps = self.replicas or [1] * len(self.stage_fns)
-        return [StageCounters(replicas=r) for r in reps]
+        devs = self.devices or [[] for _ in reps]
+        return [StageCounters(replicas=r, devices=list(d))
+                for r, d in zip(reps, devs)]
 
     # -- construction helpers ------------------------------------------------ #
     @classmethod
@@ -437,7 +489,8 @@ class PipelineExecutor:
                       buckets: Sequence[int] | None = None,
                       profiler: Any = None, stage_workers: bool = False,
                       replicas: Sequence[int] | None = None,
-                      ) -> "PipelineExecutor":
+                      devices: Sequence[Sequence[int]] | None = None,
+                      inventory: Any = None) -> "PipelineExecutor":
         """Build from a :class:`repro.core.pipeline.BuiltPipeline`.
 
         The vmapped stage executables are hoisted onto (and shared via) the
@@ -450,7 +503,8 @@ class PipelineExecutor:
                    max_in_flight=mif, microbatch=microbatch,
                    pad_microbatches=pad_microbatches, buckets=buckets,
                    batched_fns=batched, profiler=profiler,
-                   stage_workers=stage_workers, replicas=replicas)
+                   stage_workers=stage_workers, replicas=replicas,
+                   devices=devices, inventory=inventory)
 
     # -- public API ---------------------------------------------------------- #
     def submit(self, *args: Any) -> PendingToken:
@@ -508,19 +562,32 @@ class PipelineExecutor:
         """Compile the per-token and (if batching) vmapped stage
         executables for one example token, blocking until ready.  With
         bucketed padding every bucket size is warmed, so steady-state
-        serving never compiles for a ragged group again.  The attached
-        profiler (if any) is suspended so compile time never lands in the
-        profile and poisons the first re-plan decision."""
+        serving never compiles for a ragged group again.  A device-pinned
+        executor warms every replica: groups route to replica ``seq %
+        r``, and each pinned replica's device builds its own jit
+        executable, so one warm group per replica (``max(replicas)``
+        consecutive seqs cover every stage's replicas) keeps first-touch
+        compiles off the serving path for devices 1..N-1 too.  The
+        attached profiler (if any) is suspended so compile time never
+        lands in the profile and poisons the first re-plan decision."""
         prof, self.profiler = self.profiler, None
+        # one group per distinct replica ring when pinning is in effect:
+        # consecutive seqs 0..max_r-1 hit residue w of every stage whose
+        # width r_s <= max_r (all of them), i.e. every pinned device
+        rounds = max(self.replicas) if (self.replicas is not None
+                                        and self._replica_devs is not None) \
+            else 1
         try:
-            self.submit(*args).result()
+            for _ in range(rounds):
+                self.submit(*args).result()
             if self.microbatch > 1:
                 sizes = set(self.buckets or ()) | {self.microbatch}
                 for n in sorted(sizes):
                     if n <= 1:
                         continue
-                    for h in self.submit_many([args] * n):
-                        h.result()
+                    for _ in range(rounds):
+                        for h in self.submit_many([args] * n):
+                            h.result()
         finally:
             self.profiler = prof
         self.reset_stats()
@@ -755,14 +822,23 @@ class PipelineExecutor:
     def _replica_loop(self, si: int, w: int) -> None:
         """Worker loop for replica ``w`` of stage ``si``.
 
-        Pops this replica's owned seqs in order, runs the stage to
-        completion (blocking on device work), and routes the group to the
-        next stage's owning replica — or signals completion after the last
-        stage.  An errored group is forwarded without executing further
-        stages, so downstream replicas never stall on a skipped seq.
+        Pops this replica's owned seqs in order, stages the group onto
+        this replica's pinned device (when one is assigned), runs the
+        stage to completion (blocking on device work), and routes the
+        group to the next stage's owning replica — or signals completion
+        after the last stage.  An errored group is forwarded without
+        executing further stages, so downstream replicas never stall on a
+        skipped seq.
         """
         ring = self._rings[si][w]
         last = si == len(self.stage_fns) - 1
+        dev = (self._replica_devs[si][w]
+               if self._replica_devs is not None else None)
+        # profiler attribution must describe placements actually in effect:
+        # in degraded mode (single/planning-only inventory) nothing is
+        # staged, so samples carry no device ordinal
+        ordinal = (self.devices[si][w]
+                   if self._replica_devs is not None else None)
         while True:
             item = ring.pop()
             if item is None:
@@ -771,12 +847,29 @@ class PipelineExecutor:
             if g.error is None:
                 t0 = time.perf_counter()
                 try:
+                    if dev is not None:
+                        # commit the group onto this replica's device; the
+                        # jitted stage then compiles/executes there (one
+                        # executable per device, cached by jit) and its
+                        # outputs stay committed for the .devices() audit
+                        g.env = jax.device_put(g.env, dev)
+                        xfer = (time.perf_counter() - t0) * 1e3
+                    else:
+                        xfer = 0.0
                     g.env = jax.block_until_ready(g.fns[si](g.env))
                     ms = (time.perf_counter() - t0) * 1e3
                     if self.profiler is not None:
-                        self.profiler.record(si, ms, replica=w)
+                        # the profiler measures SERVICE time — staging
+                        # included, matching the replicated_bottleneck_ms
+                        # contract that hand-off overhead lives in the
+                        # measured stage time
+                        self.profiler.record(si, ms, replica=w,
+                                             device=ordinal)
                     with self._lock:
-                        self._stats.per_stage[si].exec_ms += ms
+                        # counters are DISJOINT: exec_ms is the stage body
+                        # alone, xfer_ms the staging hop (sum = service)
+                        self._stats.per_stage[si].exec_ms += ms - xfer
+                        self._stats.per_stage[si].xfer_ms += xfer
                 except BaseException as e:
                     g.error = e
             if last:

@@ -20,6 +20,8 @@ from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
+from .placement import Placement
+
 
 # --------------------------------------------------------------------------- #
 # Values (edges)
@@ -59,8 +61,12 @@ class Node:
     ``fn_key`` is the database lookup key (paper: the function *name* used to
     search the hardware-module database).  ``time_ms`` is the profiled
     processing time from the Frontend; ``placement`` is filled by the Backend
-    after database lookup ("hw" = accelerated/Pallas module exists, "sw" =
-    software fallback on plain XLA).
+    after database lookup — a structured :class:`~repro.core.placement.
+    Placement` (backend kind + device ordinal + replica index).  Legacy
+    string placements ("hw"/"sw") are parsed on construction and on
+    attribute assignment-free paths via :meth:`Placement.parse`, so seed
+    IRs and user ``edit_ir`` hooks that pin placements by string keep
+    working.
     """
 
     name: str                              # unique instance name, e.g. "cvtColor_0"
@@ -77,7 +83,7 @@ class Node:
     t_end: float | None = None             # absolute end   (profile log)
     flops: float | None = None             # analytical cost-model annotations
     bytes_rw: float | None = None
-    placement: str = "unassigned"          # "hw" | "sw" | "unassigned"
+    placement: Placement = field(default_factory=Placement)
     # TBB filter-kind marker: a serial-only function is not side-effect safe
     # (hidden state, ordered I/O, RNG, in-place buffers), so any stage
     # containing it must keep exactly ONE worker — assign_replicas never
@@ -101,6 +107,12 @@ class Node:
     # backend feed every part exactly the values it consumed pre-fusion.
     fused_part_inputs: list[list[str]] = field(default_factory=list)
     fused_part_outputs: list[list[str]] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        # back-compat: legacy string placements (and JSON dicts) normalize
+        # to the structured Placement on construction
+        if not isinstance(self.placement, Placement):
+            self.placement = Placement.parse(self.placement)
 
 
 # --------------------------------------------------------------------------- #
@@ -191,7 +203,8 @@ class CourierIR:
             lines.append(f"  (in)  {vn}: {v.shape} {v.dtype}  [{v.nbytes} B]")
         for n in self.nodes:
             t = f"{n.time_ms:.1f} ms" if n.time_ms is not None else "?"
-            lines.append(f"  [{n.placement:^10s}] {n.name} <{n.fn_key}>  {t}")
+            p = Placement.parse(n.placement).short()
+            lines.append(f"  [{p:^10s}] {n.name} <{n.fn_key}>  {t}")
             for o in n.outputs:
                 v = self.values[o]
                 lines.append(f"      -> {o}: {v.shape} {v.dtype}  [{v.nbytes} B]")

@@ -24,6 +24,7 @@ from .costmodel import CostModel
 from .database import ModuleDatabase, ModuleEntry, default_db
 from .ir import CourierIR
 from .pipeline import BuiltPipeline, PipelineGenerator
+from .placement import Placement, is_hw
 from .tracer import Frontend, deploy
 
 __all__ = ["OffloadPlan", "OffloadedFunction", "courier_offload"]
@@ -34,18 +35,25 @@ __all__ = ["OffloadPlan", "OffloadedFunction", "courier_offload"]
 # --------------------------------------------------------------------------- #
 @dataclass
 class OffloadPlan:
-    """fn_key → "hw"/"sw" decisions, consumed by the deploy context."""
+    """fn_key → backend-kind decisions, consumed by the deploy context.
+
+    ``decisions`` values are placement kind strings (the
+    :data:`~repro.core.placement.HW`/:data:`~repro.core.placement.SW`
+    constants) so a serialized plan stays a flat JSON-able dict; all
+    comparisons go through the placement helpers.
+    """
 
     decisions: dict[str, str] = field(default_factory=dict)
     fallback_log: list[str] = field(default_factory=list)
 
     @classmethod
     def from_ir(cls, ir: CourierIR) -> "OffloadPlan":
-        return cls(decisions={n.fn_key: n.placement for n in ir.nodes
-                              if n.placement != "unassigned"})
+        kinds = ((n.fn_key, Placement.parse(n.placement)) for n in ir.nodes)
+        return cls(decisions={k: p.kind for k, p in kinds if p.is_assigned})
 
     def resolve(self, entry: ModuleEntry) -> Callable:
-        want_hw = self.decisions.get(entry.name) == "hw" and entry.accelerated
+        want_hw = (is_hw(self.decisions.get(entry.name))
+                   and entry.accelerated)
         if not want_hw:
             return entry.software
 

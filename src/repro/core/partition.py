@@ -28,15 +28,18 @@ from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
 from .costmodel import (VMEM_BYTES, FusionEstimate, NodeCost, fused_cost,
-                        replicated_bottleneck_ms)
+                        replicated_bottleneck_ms, transfer_ms)
 from .database import ModuleDatabase
 from .ir import CourierIR, Node
+from .placement import (AUTO_BUDGET, DeviceInventory, Placement,
+                        resolve_worker_budget)
 
 __all__ = [
     "StagePlan", "PipelinePlan",
     "partition_paper", "partition_optimal", "fuse_adjacent_hw",
     "fused_working_set_bytes", "make_model_fused_cost", "split_fused_node",
-    "assign_replicas",
+    "assign_replicas", "assign_stage_devices", "clear_stage_devices",
+    "widen_for_deployment",
 ]
 
 
@@ -45,9 +48,19 @@ class StagePlan:
     node_names: list[str]
     est_time_ms: float
     kind: str = "parallel"            # "serial_in_order" | "parallel" (TBB)
-    placements: list[str] = field(default_factory=list)   # "hw"/"sw" per node
+    placements: list[Placement] = field(default_factory=list)  # per node
     comm_in_bytes: int = 0            # intermediate data entering this stage
     replicas: int = 1                 # worker threads (TBB parallel filter)
+    # per-replica device assignment (ordinals into the planner's
+    # DeviceInventory; empty = unpinned, every replica on the default
+    # device — the single-host degenerate case)
+    devices: list[int] = field(default_factory=list)
+    # per-replica relative throughput (parallel to ``devices``; empty =
+    # homogeneous at the class baseline)
+    device_speeds: list[float] = field(default_factory=list)
+    # transfer cost charged when this stage's device set differs from its
+    # predecessor's (host<->device staging of comm_in_bytes per token)
+    xfer_in_ms: float = 0.0
 
 
 @dataclass
@@ -73,15 +86,28 @@ class PipelinePlan:
         return sum(s.replicas for s in self.stages)
 
     @property
+    def stage_devices(self) -> list[list[int]] | None:
+        """Per-stage per-replica device ordinals; None when unpinned."""
+        if not any(s.devices for s in self.stages):
+            return None
+        return [list(s.devices) for s in self.stages]
+
+    @property
     def effective_bottleneck_ms(self) -> float:
         """Predicted token period with stage replication applied.
 
         A stage ``r`` workers wide retires a token every ``t / r`` ms in
         steady state, so the period is ``max_k t_k / r_k`` — equal to
-        :attr:`bottleneck_ms` for an all-serial plan.
+        :attr:`bottleneck_ms` for an all-serial plan.  Device-pinned plans
+        additionally charge each stage its cross-device boundary transfer
+        (``xfer_in_ms``) and weight replicas by their device speed.
         """
+        speeds = None
+        if any(s.device_speeds for s in self.stages):
+            speeds = [list(s.device_speeds) for s in self.stages]
         return replicated_bottleneck_ms(
-            [s.est_time_ms for s in self.stages], self.replicas)
+            [s.est_time_ms + s.xfer_in_ms for s in self.stages],
+            self.replicas, speeds)
 
     def predicted_speedup(self, n_tokens: int = 1000) -> float:
         """Sequential time vs pipelined time for a long token stream.
@@ -100,8 +126,10 @@ class PipelinePlan:
                 f"steady-state speedup={self.predicted_speedup():.2f}x"]
         for i, s in enumerate(self.stages):
             width = f" x{s.replicas}" if s.replicas > 1 else ""
-            rows.append(f"  Stage #{i} [{s.kind:>15s}]{width} "
-                        f"{s.est_time_ms:8.2f} ms  "
+            devs = f" on devices {s.devices}" if s.devices else ""
+            xfer = f" (+{s.xfer_in_ms:.2f} ms xfer)" if s.xfer_in_ms else ""
+            rows.append(f"  Stage #{i} [{s.kind:>15s}]{width}{devs} "
+                        f"{s.est_time_ms:8.2f} ms{xfer}  "
                         f"{list(zip(s.node_names, s.placements))}")
         return "\n".join(rows)
 
@@ -245,7 +273,9 @@ def partition_optimal(ir: CourierIR, max_stages: int | None = None,
 # Stage replication — widen the bottleneck stage (TBB parallel filters)
 # --------------------------------------------------------------------------- #
 def assign_replicas(plan: PipelinePlan, ir: CourierIR | None = None, *,
-                    worker_budget: int, target_ms: float | None = None,
+                    worker_budget: "int | str | None" = None,
+                    inventory: DeviceInventory | None = None,
+                    target_ms: float | None = None,
                     max_replicas: int | None = None) -> PipelinePlan:
     """Pick per-stage replication factors under a total worker budget.
 
@@ -258,6 +288,16 @@ def assign_replicas(plan: PipelinePlan, ir: CourierIR | None = None, *,
     fits ``worker_budget``, floored by the slowest non-replicable stage
     (no budget can widen past it).
 
+    ``worker_budget`` may be an explicit int (the override),
+    :data:`~repro.core.placement.AUTO_BUDGET` (the ``os.cpu_count()``
+    governor), or ``None`` — which derives the budget from ``inventory``
+    when one is given and raises otherwise.  ``inventory``
+    (a :class:`~repro.core.placement.DeviceInventory`) additionally maps
+    each replica onto a concrete device via
+    :func:`assign_stage_devices`: the N replicas of a widened stage are
+    pinned to N distinct chips/cores and cross-device stage boundaries
+    are charged their transfer cost.
+
     A stage is replicable only when every node in it is side-effect safe
     (``Node.serial_only`` unset); pass ``ir`` to enforce the markers —
     without it every stage is assumed pure (true for traced jnp/Pallas
@@ -266,10 +306,10 @@ def assign_replicas(plan: PipelinePlan, ir: CourierIR | None = None, *,
     effective time suffers least, so the result always satisfies
     ``plan.total_workers <= worker_budget``.
 
-    Mutates (and returns) ``plan``: only the stages' ``replicas`` fields
-    change; boundaries, times, and kinds are untouched, which is what
-    lets the executor reuse every compiled StageFn when the re-planner
-    chooses widening over re-balancing.
+    Mutates (and returns) ``plan``: only the stages' ``replicas`` (and
+    device-assignment) fields change; boundaries, times, and kinds are
+    untouched, which is what lets the executor reuse every compiled
+    StageFn when the re-planner chooses widening over re-balancing.
     """
     import math
 
@@ -277,6 +317,10 @@ def assign_replicas(plan: PipelinePlan, ir: CourierIR | None = None, *,
     n = len(times)
     if n == 0:
         return plan
+    worker_budget = resolve_worker_budget(worker_budget, n, inventory)
+    if worker_budget is None:
+        raise ValueError("assign_replicas needs a worker_budget (or an "
+                         "inventory to derive one from)")
     if worker_budget < n:
         raise ValueError(f"worker_budget {worker_budget} below the one-"
                          f"worker-per-stage floor ({n} stages)")
@@ -320,6 +364,127 @@ def assign_replicas(plan: PipelinePlan, ir: CourierIR | None = None, *,
         reps[k] -= 1
     for s, r in zip(plan.stages, reps):
         s.replicas = int(r)
+    if inventory is not None:
+        assign_stage_devices(plan, inventory, ir=ir)
+    else:
+        # mutate-and-rerun API: a previous device-assigned run must not
+        # leave stale per-replica pinnings behind (their lengths would no
+        # longer match the new replica counts)
+        clear_stage_devices(plan)
+    return plan
+
+
+def clear_stage_devices(plan: PipelinePlan) -> PipelinePlan:
+    """Drop per-replica device pinnings (and their transfer charges).
+
+    Callers use this when a device-assigned plan ends up deployed
+    *unpinned* (no stage widened, so the executor runs on the default
+    device): keeping the pinnings would charge ``effective_bottleneck_ms``
+    transfer costs the executor never pays, skewing replan comparisons.
+    """
+    for s in plan.stages:
+        s.devices = []
+        s.device_speeds = []
+        s.xfer_in_ms = 0.0
+    return plan
+
+
+def widen_for_deployment(plan: PipelinePlan, ir: CourierIR | None = None, *,
+                         worker_budget: "int | str | None" = None,
+                         inventory: DeviceInventory | None = None,
+                         ) -> "tuple[list[int] | None, list[list[int]] | None]":
+    """The widening pass as every deployment site must apply it.
+
+    Resolves the budget (:func:`~repro.core.placement.
+    resolve_worker_budget`), runs :func:`assign_replicas` (device-pinned
+    when an ``inventory`` is given), and returns the ``(replicas,
+    devices)`` pair to hand the executor.  When no budget resolves or no
+    stage widens it returns ``(None, None)`` **and clears any pinnings
+    off the plan** — the executor then runs unpinned, and a plan that
+    kept device speeds / transfer charges would feed wrong effective
+    periods to replan comparisons and the serving batcher.  One helper so
+    the deploy-or-degrade rule cannot diverge between call sites
+    (``ElasticPlanner`` and ``serve_pipeline_demo`` both go through it).
+    """
+    wb = resolve_worker_budget(worker_budget, len(plan.stages), inventory)
+    if wb is None:
+        clear_stage_devices(plan)     # the docstring's promise holds here too
+        return None, None
+    assign_replicas(plan, ir, worker_budget=wb, inventory=inventory)
+    if not any(s.replicas > 1 for s in plan.stages):
+        clear_stage_devices(plan)
+        return None, None
+    return plan.replicas, plan.stage_devices
+
+
+def assign_stage_devices(plan: PipelinePlan, inventory: DeviceInventory,
+                         ir: CourierIR | None = None) -> PipelinePlan:
+    """Map every stage replica onto a concrete device of ``inventory``.
+
+    Placement rule (greedy, heaviest stage first): each stage's ``r``
+    replicas are pinned to the ``r`` devices that would complete the
+    stage's per-replica share earliest — *distinct* devices whenever the
+    inventory holds at least ``r`` (the whole point of widening onto
+    hardware: N replicas on N chips), with wrap-around only when replicas
+    outnumber devices.  Load is the per-device sum of assigned
+    speed-normalized ``est_time_ms / replicas`` shares, so two widened
+    stages spread over different chips instead of stacking onto device 0.
+    Per-replica ``device_speeds`` come from the specs; a stage whose
+    device set differs from its predecessor's is charged the transfer of
+    its ``comm_in_bytes`` at the slower side's staging bandwidth
+    (``xfer_in_ms``).  Stage 0 is charged the *graph inputs'* host-side
+    staging when ``ir`` is given (the executor ``device_put``\\ s every
+    admitted group, and the first stage's inputs are often the pipeline's
+    biggest tensors); without an ``ir`` the input bytes are unknown and
+    stage 0 stays uncharged.
+
+    On a single-device inventory every replica lands on ordinal 0 with
+    no transfer charge anywhere — the executor detects that and degrades
+    to the host-thread behavior, paying no staging.  Mutates and returns
+    ``plan``.
+    """
+    n_dev = len(inventory)
+    load = [0.0] * n_dev
+    order = sorted(range(len(plan.stages)),
+                   key=lambda i: -float(plan.stages[i].est_time_ms))
+    for i in order:
+        s = plan.stages[i]
+        r = max(int(s.replicas), 1)
+        chosen: list[int] = []
+        for j in range(r):
+            pool = [d for d in range(n_dev) if d not in chosen] or \
+                list(range(n_dev))
+            share = float(s.est_time_ms) / r
+            # load[d] is already the device's busy TIME (speed-normalized
+            # at accumulation); pick the device that would finish this
+            # replica's share earliest
+            d = min(pool, key=lambda d: (
+                load[d] + share / inventory.spec(d).speed, d))
+            chosen.append(d)
+            load[d] += share / inventory.spec(d).speed
+        s.devices = chosen
+        s.device_speeds = [float(inventory.spec(d).speed) for d in chosen]
+    # boundary transfer: charged where the device set changes hands.  A
+    # single-distinct-device plan degrades in the executor (no puts at
+    # all), so nothing is charged anywhere.
+    multi = len({d for s in plan.stages for d in s.devices}) > 1
+    if plan.stages:
+        s0 = plan.stages[0]
+        s0.xfer_in_ms = 0.0
+        if multi and ir is not None:
+            in_bytes = sum(ir.values[v].nbytes for v in ir.graph_inputs)
+            if in_bytes > 0:
+                bw = min(inventory.device_class(d).xfer_bw
+                         for d in s0.devices)
+                s0.xfer_in_ms = transfer_ms(in_bytes, bw)
+    for a, b in zip(plan.stages[:-1], plan.stages[1:]):
+        cur = set(b.devices)
+        if multi and cur != set(a.devices) and b.comm_in_bytes > 0:
+            bw = min(inventory.device_class(d).xfer_bw
+                     for d in (cur | set(a.devices)))
+            b.xfer_in_ms = transfer_ms(b.comm_in_bytes, bw)
+        else:
+            b.xfer_in_ms = 0.0
     return plan
 
 
@@ -528,7 +693,8 @@ def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
                     fn_key="+".join(n.fn_key for n in run),
                     inputs=ext_inputs,
                     outputs=list(run[-1].outputs),
-                    params=merged_params, time_ms=est_ms, placement="hw",
+                    params=merged_params, time_ms=est_ms,
+                    placement=Placement.hw(),
                     fused_from=[n.name for n in run],
                     fused_input_shapes=[
                         [ir.values[i].shape for i in n.inputs] for n in run],

@@ -44,6 +44,7 @@ from .database import ModuleDatabase
 from .ir import CourierIR, Node
 from .partition import (PipelinePlan, StagePlan, fuse_adjacent_hw,
                         partition_optimal, partition_paper)
+from .placement import HW, SW, Placement, is_hw
 
 __all__ = ["PipelineGenerator", "BuiltPipeline", "StageFn",
            "assign_placements", "make_stage_fns"]
@@ -56,18 +57,22 @@ def assign_placements(ir: CourierIR, db: ModuleDatabase,
                       prefer_hw: bool = True) -> None:
     """Paper Fig. 3 'Search corresponding modules from a HW module DB'.
 
-    Marks each node "hw"/"sw" and, for hw nodes with a cost estimator,
-    replaces the measured software time with the estimated accelerated time
-    (the paper mixes measured SW times with synthesis-estimated HW times).
-    Nodes whose ``time_ms`` came from the *online* profile
-    (``time_source == "profile"``) keep it — a measurement of the deployed
-    hw module outranks the synthesis-report estimate it superseded.
+    Marks each node's backend kind (hw = accelerated module, sw = software
+    fallback) and, for hw nodes with a cost estimator, replaces the
+    measured software time with the estimated accelerated time (the paper
+    mixes measured SW times with synthesis-estimated HW times).  Nodes
+    whose ``time_ms`` came from the *online* profile (``time_source ==
+    "profile"``) keep it — a measurement of the deployed hw module
+    outranks the synthesis-report estimate it superseded.  Only the
+    placement's *kind* is (re)resolved here: a device/replica pinning set
+    by the replica-assignment pass (or a user ``edit_ir`` hook) survives.
     """
     for n in ir.nodes:
         e = db.lookup(n.fn_key)
         shapes = [ir.values[i].shape for i in n.inputs]
+        cur = Placement.parse(n.placement)
         if e is not None and prefer_hw and e.has_hw(*shapes):
-            n.placement = "hw"
+            n.placement = cur.with_kind(HW)
             if e.cost_hw is not None:
                 dtypes = [ir.values[i].dtype for i in n.inputs]
                 c = e.cost_hw(shapes, dtypes, n.params)
@@ -75,7 +80,7 @@ def assign_placements(ir: CourierIR, db: ModuleDatabase,
                 if n.time_source != "profile":
                     n.time_ms = c.time_ms()
         else:
-            n.placement = "sw"
+            n.placement = cur.with_kind(SW)
 
 
 # --------------------------------------------------------------------------- #
@@ -184,8 +189,7 @@ def _resolve_impl(node: Node, ir: CourierIR, db: ModuleDatabase) -> Callable:
             return out[0] if len(out) == 1 else tuple(out)
         return fused
     shapes = [ir.values[i].shape for i in node.inputs]
-    fn, _ = db.resolve(node.fn_key, *shapes,
-                       prefer_hw=(node.placement == "hw"))
+    fn, _ = db.resolve(node.fn_key, *shapes, prefer_hw=is_hw(node.placement))
     return fn
 
 
@@ -268,7 +272,7 @@ def make_stage_fns(ir: CourierIR, db: ModuleDatabase, plan: PipelinePlan,
         # not the plan's snapshot — a plan computed before assign_placements
         # would otherwise never hit the cache
         key = (tuple(s.node_names),
-               tuple(n.placement for n in nodes),
+               tuple(Placement.parse(n.placement).key for n in nodes),
                tuple(boundaries[k]), tuple(live_out), jit, can_donate)
         if cache is not None and key in cache:
             fns.append(cache[key])
@@ -361,7 +365,8 @@ class BuiltPipeline:
                  buckets: "Sequence[int] | None" = None,
                  profiler: Any = None, stage_workers: bool = False,
                  replicas: "Sequence[int] | None" = None,
-                 ) -> "PipelineExecutor":
+                 devices: "Sequence[Sequence[int]] | None" = None,
+                 inventory: Any = None) -> "PipelineExecutor":
         """Build a :class:`~repro.core.executor.PipelineExecutor` over the
         compiled stages (bounded token pool, eager async issue, optional
         per-stage micro-batching with bucketed ragged-group padding).
@@ -372,13 +377,15 @@ class BuiltPipeline:
         per-stage times; ``stage_workers`` runs stages on dedicated
         threads (host-bound pipelines); ``replicas`` widens stages to the
         given per-stage worker counts (TBB parallel filters — see
-        :func:`repro.core.partition.assign_replicas`)."""
+        :func:`repro.core.partition.assign_replicas`); ``devices`` pins
+        each replica to a device ordinal of ``inventory`` (the plan's
+        :attr:`~repro.core.partition.PipelinePlan.stage_devices`)."""
         from .executor import PipelineExecutor
         return PipelineExecutor.from_pipeline(
             self, max_in_flight=max_in_flight, microbatch=microbatch,
             pad_microbatches=pad_microbatches, buckets=buckets,
             profiler=profiler, stage_workers=stage_workers,
-            replicas=replicas)
+            replicas=replicas, devices=devices, inventory=inventory)
 
     def run_async(self, tokens: Iterable[tuple | Any], *,
                   max_in_flight: int | None = None,

@@ -92,6 +92,11 @@ class StageProfiler:
         # (stage, replica) -> [count, ema]; populated only when the
         # executor reports a replica index
         self._replica: dict[tuple[int, int], list] = {}
+        # per-(stage, device-ordinal) attribution for device-pinned
+        # replicas: (stage, device) -> [count, ema]; populated only when
+        # the executor reports a device ordinal, so snapshots show which
+        # chip served the stage (and which chip is the straggler)
+        self._device: dict[tuple[int, int], list] = {}
 
     def clone_for(self, n_stages: int) -> "StageProfiler":
         """Fresh profiler with the same knobs for a re-planned stage count."""
@@ -107,15 +112,18 @@ class StageProfiler:
             self._ticks += 1
         return t % self.sample_every == 0
 
-    def record(self, stage: int, ms: float, replica: int | None = None) -> None:
+    def record(self, stage: int, ms: float, replica: int | None = None,
+               device: int | None = None) -> None:
         """Record one measured wall time (ms) for ``stage``.
 
         ``replica`` (replicated-stage executors) additionally attributes
         the sample to that worker, so a straggling replica — one slow
         thread among N serving a widened stage — is visible in
-        :meth:`snapshot` instead of being averaged away.  The per-stage
-        aggregate (what re-planning reads) always measures the *service*
-        time of one token group, whichever replica ran it.
+        :meth:`snapshot` instead of being averaged away; ``device``
+        (device-pinned replicas) attributes it to the chip/core that ran
+        it, so per-device service times land in the same snapshot.  The
+        per-stage aggregate (what re-planning reads) always measures the
+        *service* time of one token group, whichever replica ran it.
         """
         if not 0 <= stage < self.n_stages:
             raise IndexError(f"stage {stage} out of range [0, {self.n_stages})")
@@ -126,9 +134,11 @@ class StageProfiler:
                 else (1.0 - self.alpha) * prev + self.alpha * ms
             self._win[stage].append(ms)
             self._count[stage] += 1
-            if replica is not None:
-                rec = self._replica.setdefault((stage, int(replica)),
-                                               [0, None])
+            for table, idx in ((self._replica, replica),
+                               (self._device, device)):
+                if idx is None:
+                    continue
+                rec = table.setdefault((stage, int(idx)), [0, None])
                 rec[0] += 1
                 rec[1] = ms if rec[1] is None \
                     else (1.0 - self.alpha) * rec[1] + self.alpha * ms
@@ -169,6 +179,17 @@ class StageProfiler:
             return {w: rec[1] for (s, w), rec in self._replica.items()
                     if s == stage and rec[1] is not None}
 
+    def device_ms(self, stage: int) -> dict[int, float]:
+        """Per-device EMA wall times for one stage (device-pinned replicas).
+
+        Empty for stages whose samples never carried a device ordinal.
+        Heterogeneous entries here mean the widened stage's chips are not
+        pulling equally — the device-level analog of :meth:`replica_ms`.
+        """
+        with self._lock:
+            return {d: rec[1] for (s, d), rec in self._device.items()
+                    if s == stage and rec[1] is not None}
+
     @property
     def ready(self) -> bool:
         """True once every stage has ``min_samples`` measurements."""
@@ -189,8 +210,13 @@ class StageProfiler:
                 reps = {str(w): {"samples": rec[0], "ema_ms": _round(rec[1])}
                         for (s, w), rec in sorted(self._replica.items())
                         if s == k}
+                devs = {str(d): {"samples": rec[0], "ema_ms": _round(rec[1])}
+                        for (s, d), rec in sorted(self._device.items())
+                        if s == k}
             if reps:
                 entry["replicas"] = reps
+            if devs:
+                entry["devices"] = devs
             stages.append(entry)
         return {"n_stages": self.n_stages, "sample_every": self.sample_every,
                 "window": self.window, "per_stage": stages}
@@ -203,6 +229,7 @@ class StageProfiler:
             self._count = [0] * self.n_stages
             self._ticks = 0
             self._replica.clear()
+            self._device.clear()
 
     # -- cost-model write-back -------------------------------------------------- #
     def apply_to_ir(self, ir: "CourierIR", plan: "PipelinePlan", *,

@@ -74,6 +74,37 @@ class Request:
         return (self.t_batch - self.t_submit) * 1e3
 
 
+def replication_aware_batching(plan: Any, *, max_batch: int,
+                               max_wait_ms: float,
+                               max_growth: float = 4.0,
+                               min_wait_ms: float = 0.25,
+                               ) -> tuple[int, float]:
+    """Derive dynamic-batching knobs from the plan's *effective* period.
+
+    A widened stage drains token groups ``r``-wide, so the pipeline's
+    steady-state token period is the plan's effective (replication-aware)
+    bottleneck, not the serial one.  Holding the batcher at knobs tuned
+    for the serial period would starve the replicas: the max-wait deadline
+    admits one batch per serial period while the executor could retire
+    ``ratio = serial / effective`` of them.  This helper scales the knobs
+    by that ratio — ``max_batch`` grows (more tokens per admission keeps
+    every replica fed) and ``max_wait_ms`` shrinks (partial batches
+    dispatch sooner because the pipeline drains faster) — clamped to
+    ``max_growth`` so a massively widened plan doesn't balloon the
+    compiled batch shape, and to ``min_wait_ms`` so the batcher never
+    busy-spins.  A serial plan (ratio 1) returns the knobs unchanged.
+    """
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    serial = float(plan.bottleneck_ms)
+    eff = float(plan.effective_bottleneck_ms)
+    if serial <= 0.0 or eff <= 0.0:
+        return max_batch, max_wait_ms
+    ratio = min(max(serial / eff, 1.0), float(max_growth))
+    return (max(1, int(round(max_batch * ratio))),
+            max(max_wait_ms / ratio, min_wait_ms))
+
+
 def _percentile(xs: list[float], q: float) -> float:
     """Percentile over finite samples only; 0.0 for empty/tiny windows.
 
@@ -102,12 +133,18 @@ class RequestQueueServer:
     """
 
     def __init__(self, executor: PipelineExecutor, *, max_batch: int = 8,
-                 max_wait_ms: float = 5.0, queue_depth: int | None = None):
+                 max_wait_ms: float = 5.0, queue_depth: int | None = None,
+                 plan: Any = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.executor = executor
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
+        if plan is not None:
+            # replication-aware sizing: the plan's effective (widened)
+            # bottleneck period drives the batching knobs, not the serial one
+            self.max_batch, self.max_wait_ms = replication_aware_batching(
+                plan, max_batch=max_batch, max_wait_ms=max_wait_ms)
         self.queue: Queue[Request] = Queue(
             maxsize=queue_depth if queue_depth is not None else executor.pool)
         self._issued: Queue[tuple[Request, Any]] = Queue()
@@ -319,16 +356,24 @@ class RequestQueueServer:
 def serve_pipeline_demo(n_requests: int = 64, max_batch: int = 8,
                         max_wait_ms: float = 4.0,
                         size: tuple[int, int] = (64, 96),
-                        worker_budget: int | None = None) -> dict:
+                        worker_budget: "int | str | None" = None,
+                        devices: int | None = None) -> dict:
     """Smoke-servable demo: Harris pipeline behind the request queue.
 
     ``worker_budget`` serves the pipeline with replicated stages: the
     planner's widening pass (:func:`repro.core.partition.assign_replicas`)
     distributes the budget over the planned stage times and the executor
     runs the widened stages on parallel worker threads, retiring requests
-    strictly in submission order.
+    strictly in submission order.  Pass the int budget,
+    :data:`~repro.core.placement.AUTO_BUDGET` for the cpu-count governor,
+    or set ``devices=N`` to place replicas on the first N devices of the
+    detected :class:`~repro.core.placement.DeviceInventory` (each replica
+    of a widened stage pinned to its own chip/core).  A widened plan also
+    re-derives the batching knobs from its effective bottleneck period
+    (:func:`replication_aware_batching`).
     """
-    from repro.core import assign_replicas, courier_offload
+    from repro.core import DeviceInventory, courier_offload
+    from repro.core.partition import widen_for_deployment
     from repro.core.tracer import Library
     from repro.models.harris import corner_harris_demo, make_harris_db
 
@@ -341,16 +386,23 @@ def serve_pipeline_demo(n_requests: int = 64, max_batch: int = 8,
     frames = [jax.random.uniform(jax.random.PRNGKey(i), (H, W, 3)) * 255
               for i in range(n_requests)]
     off = courier_offload(app, frames[0], db=db, prefer_hw=False)
-    replicas = None
-    if worker_budget is not None:
-        plan = assign_replicas(off.pipeline.plan, off.pipeline.ir,
-                               worker_budget=worker_budget)
-        if any(r > 1 for r in plan.replicas):
-            replicas = plan.replicas
+    inventory = DeviceInventory.detect(limit=devices) if devices else None
+    plan = off.pipeline.plan
+    # the shared deploy-or-degrade rule: a plan that ends up unpinned
+    # carries no pinnings, so the batching knobs below are sized from the
+    # period the executor will actually run at
+    replicas, stage_devices = widen_for_deployment(
+        plan, off.pipeline.ir, worker_budget=worker_budget,
+        inventory=inventory)
+    if replicas is not None:
+        # a widened plan drains r-wide: grow the batch / shrink the wait
+        max_batch, max_wait_ms = replication_aware_batching(
+            plan, max_batch=max_batch, max_wait_ms=max_wait_ms)
     # pad_microbatches: ragged partial batches reuse the one compiled
     # [max_batch, ...] executable instead of compiling per batch size
     ex = off.pipeline.executor(microbatch=max_batch, pad_microbatches=True,
-                               replicas=replicas)
+                               replicas=replicas, devices=stage_devices,
+                               inventory=inventory)
     ex.warmup(frames[0])      # compile before latencies are measured
 
     with RequestQueueServer(ex, max_batch=max_batch,
@@ -359,6 +411,20 @@ def serve_pipeline_demo(n_requests: int = 64, max_batch: int = 8,
         for r in reqs:
             r.wait(timeout=120.0)
     return srv.stats()
+
+
+def _budget_arg(v: str):
+    """argparse type for --worker-budget: an int or the 'auto' sentinel,
+    rejected with a clean argparse error instead of an int() traceback."""
+    from repro.core.placement import AUTO_BUDGET
+
+    if v == AUTO_BUDGET:
+        return v
+    try:
+        return int(v)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected an integer or 'auto', got {v!r}")
 
 
 def main() -> None:
@@ -372,16 +438,23 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-wait-ms", type=float, default=4.0)
-    ap.add_argument("--worker-budget", type=int, default=None,
+    ap.add_argument("--worker-budget", type=_budget_arg, default=None,
                     help="total stage workers; > n_stages widens "
-                         "(replicates) the bottleneck stages")
+                         "(replicates) the bottleneck stages; 'auto' "
+                         "derives the budget from os.cpu_count() minus "
+                         "the REPRO_RESERVED_CORES headroom")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="place stage replicas on the first N detected "
+                         "devices (jax.devices()); each replica of a "
+                         "widened stage is pinned to its own device")
     args = ap.parse_args()
 
     if args.mode == "pipeline":
         stats = serve_pipeline_demo(n_requests=args.requests,
                                     max_batch=args.max_batch,
                                     max_wait_ms=args.max_wait_ms,
-                                    worker_budget=args.worker_budget)
+                                    worker_budget=args.worker_budget,
+                                    devices=args.devices)
         lat = stats["latency_ms"]
         print(f"[serve] pipeline mode: {stats['requests_served']} requests, "
               f"{stats['batches']} batches "

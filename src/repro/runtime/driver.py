@@ -29,6 +29,7 @@ import numpy as np
 from repro.core.ir import CourierIR
 from repro.core.partition import (PipelinePlan, StagePlan, assign_replicas,
                                   partition_optimal)
+from repro.core.placement import DeviceInventory, resolve_worker_budget
 
 
 # --------------------------------------------------------------------------- #
@@ -108,11 +109,15 @@ class ElasticPlanner:
 
     def __init__(self, layer_ir: CourierIR, db: Any = None, *,
                  min_gain: float = 1.15, margin: float | None = None,
-                 min_samples: int = 4):
+                 min_samples: int = 4,
+                 inventory: DeviceInventory | None = None):
         from repro.core.costmodel import PROFILE_MARGIN
 
         self.layer_ir = layer_ir
         self.db = db
+        # the devices the planner places stage replicas onto; None keeps
+        # the host-thread widening (devices unpinned, today's behavior)
+        self.inventory = inventory
         self.min_gain = float(min_gain)
         self.margin = PROFILE_MARGIN if margin is None else float(margin)
         self.min_samples = int(min_samples)
@@ -150,8 +155,9 @@ class ElasticPlanner:
 
     @staticmethod
     def _cache_key(plan: PipelinePlan, replicas, max_in_flight, microbatch,
-                   jit, stage_workers, profiler) -> tuple:
-        """Executor-cache identity: plan shape + replicas + executor config.
+                   jit, stage_workers, profiler, devices=None) -> tuple:
+        """Executor-cache identity: plan shape + replicas + device pinning
+        + executor config.
 
         Single source of truth for both :meth:`executor_for` and
         :meth:`replan_from_profile` — a key-shape change that touched only
@@ -160,11 +166,12 @@ class ElasticPlanner:
         """
         return (tuple(len(s.node_names) for s in plan.stages),
                 tuple(replicas) if replicas else None,
+                tuple(tuple(row) for row in devices) if devices else None,
                 max_in_flight, microbatch, jit, stage_workers, id(profiler))
 
     def _build_executor(self, plan: PipelinePlan, *, max_in_flight, microbatch,
                         jit, profiler=None, stage_workers=False,
-                        replicas=None) -> Any:
+                        replicas=None, devices=None) -> Any:
         from repro.core.executor import PipelineExecutor
         from repro.core.pipeline import assign_placements, make_stage_fns
 
@@ -176,13 +183,27 @@ class ElasticPlanner:
                                 max_in_flight=max_in_flight,
                                 microbatch=microbatch, profiler=profiler,
                                 stage_workers=stage_workers,
-                                replicas=replicas)
+                                replicas=replicas, devices=devices,
+                                inventory=self.inventory)
+
+    def _widen(self, plan: PipelinePlan, worker_budget) -> tuple:
+        """Run the widening pass on ``plan``; returns (replicas, devices)
+        for the executor — (None, None) when no stage widened (or no
+        budget resolved), so serial plans keep the async-dispatch path
+        with no stale pinnings (see
+        :func:`~repro.core.partition.widen_for_deployment`)."""
+        from repro.core.partition import widen_for_deployment
+
+        return widen_for_deployment(plan, self.layer_ir,
+                                    worker_budget=worker_budget,
+                                    inventory=self.inventory)
 
     def executor_for(self, n_stages: int, *, max_in_flight: int | None = None,
                      microbatch: int = 1, jit: bool = True,
                      profiler: Any = None,
                      stage_workers: bool = False,
-                     worker_budget: int | None = None) -> tuple[Any, bool]:
+                     worker_budget: "int | str | None" = None,
+                     ) -> tuple[Any, bool]:
         """(executor, rebuilt) for a resource count of ``n_stages``.
 
         Re-partitions the IR for the new stage count; when the resulting
@@ -194,19 +215,19 @@ class ElasticPlanner:
 
         ``worker_budget`` widens stages beyond one worker each
         (:func:`~repro.core.partition.assign_replicas` over the planned
-        stage times) and runs the executor in replicated mode.
+        stage times) and runs the executor in replicated mode: an int is
+        the explicit budget, :data:`~repro.core.placement.AUTO_BUDGET`
+        derives it from the cpu-count governor, and ``None`` widens only
+        when the planner holds a :class:`~repro.core.placement.
+        DeviceInventory` (whose devices then pin the replicas).
         """
         if self.db is None:
             raise ValueError("ElasticPlanner needs a ModuleDatabase to build "
                              "executors; pass db= at construction")
         plan = self.plan(n_stages)
-        replicas = None
-        if worker_budget is not None:
-            assign_replicas(plan, self.layer_ir, worker_budget=worker_budget)
-            if any(r > 1 for r in plan.replicas):
-                replicas = plan.replicas
+        replicas, devices = self._widen(plan, worker_budget)
         key = self._cache_key(plan, replicas, max_in_flight, microbatch,
-                              jit, stage_workers, profiler)
+                              jit, stage_workers, profiler, devices)
         if self._cached is not None and self._cached[0] == key \
                 and not getattr(self._cached[1], "closed", False):
             return self._cached[1], False
@@ -214,7 +235,7 @@ class ElasticPlanner:
                                   microbatch=microbatch, jit=jit,
                                   profiler=profiler,
                                   stage_workers=stage_workers,
-                                  replicas=replicas)
+                                  replicas=replicas, devices=devices)
         self._cached = (key, ex)
         self._current_plan = plan
         self.rebuilds += 1
@@ -229,7 +250,7 @@ class ElasticPlanner:
                             margin: float | None = None,
                             min_samples: int | None = None,
                             revisit_fusion: bool = True,
-                            worker_budget: int | None = None,
+                            worker_budget: "int | str | None" = None,
                             new_profiler: Any = None) -> ReplanDecision:
         """Profile-guided re-plan check: measured costs -> maybe new executor.
 
@@ -339,8 +360,11 @@ class ElasticPlanner:
             ir,
             max_stages=max_stages if max_stages is not None else plan.n_stages)
         chosen, widened = new_plan, False
-        if worker_budget is not None:
-            assign_replicas(new_plan, ir, worker_budget=worker_budget)
+        wb_new = resolve_worker_budget(worker_budget, new_plan.n_stages,
+                                       self.inventory)
+        if wb_new is not None:
+            assign_replicas(new_plan, ir, worker_budget=wb_new,
+                            inventory=self.inventory)
             widen = PipelinePlan(
                 stages=[StagePlan(node_names=list(s.node_names),
                                   est_time_ms=float(m), kind=s.kind,
@@ -350,7 +374,25 @@ class ElasticPlanner:
                 policy="widen")
             # widening never moves boundaries, so serial_only markers are
             # checked against the CURRENT (possibly still-fused) IR
-            assign_replicas(widen, self.layer_ir, worker_budget=worker_budget)
+            wb_widen = resolve_worker_budget(worker_budget, widen.n_stages,
+                                             self.inventory)
+            assign_replicas(widen, self.layer_ir, worker_budget=wb_widen,
+                            inventory=self.inventory)
+            if plan.stage_devices is not None:
+                # the current deployment is device-pinned, so the measured
+                # stage times the candidates are built on ALREADY reflect
+                # the devices that ran them — staging hop included (the
+                # replica loop records service time, put included) and
+                # device speed included.  Re-adding the modeled transfer
+                # or dividing by device_speeds again would double-charge
+                # / double-credit them and bias the comparison; the
+                # pinnings themselves stay (the executor needs them).
+                # The delta of a changed topology stays unmodeled here;
+                # the next profile window measures it.
+                for cand in (new_plan, widen):
+                    for s in cand.stages:
+                        s.xfer_in_ms = 0.0
+                        s.device_speeds = []
             if widen.effective_bottleneck_ms \
                     <= new_plan.effective_bottleneck_ms * (1.0 + 1e-9):
                 chosen, widened = widen, True
@@ -379,12 +421,18 @@ class ElasticPlanner:
             defused = []                  # widening kept the fused stages
         replicas = chosen.replicas if any(r > 1 for r in chosen.replicas) \
             else None
+        if replicas is None:
+            # deployed unpinned: the plan must not keep charging device
+            # transfer costs the executor never pays
+            from repro.core.partition import clear_stage_devices
+            clear_stage_devices(chosen)
+        devices = chosen.stage_devices if replicas is not None else None
         ex = self._build_executor(plan=chosen, max_in_flight=max_in_flight,
                                   microbatch=microbatch, jit=jit,
                                   profiler=prof, stage_workers=stage_workers,
-                                  replicas=replicas)
+                                  replicas=replicas, devices=devices)
         key = self._cache_key(chosen, replicas, max_in_flight, microbatch,
-                              jit, stage_workers, prof)
+                              jit, stage_workers, prof, devices)
         self._cached = (key, ex)
         self._current_plan = chosen
         self.rebuilds += 1

@@ -68,6 +68,21 @@ SCHEMA = {
             "out_of_order": int,
         },
     },
+    "devices": {
+        "pinning": {"result_devices": list, "distinct": int,
+                    "out_of_order": int},
+        "sim": {
+            "n_devices": int, "tps_serial": NUM, "tps_replicated": NUM,
+            "speedup": NUM, "replicas": list, "bottleneck_devices": list,
+            "distinct_devices": int, "devices_profiled": int,
+            "xfer_accounted": bool, "out_of_order": int,
+            "worker_budget": int,
+        },
+        "hot_swap": {
+            "requests": int, "served": int, "dropped": int, "swaps": int,
+            "out_of_order": int,
+        },
+    },
 }
 
 
@@ -121,6 +136,18 @@ def test_committed_bench_json_matches_schema():
     assert data["replicate"]["hot_swap"]["out_of_order"] == 0
     assert data["replicate"]["hot_swap"]["recompiles_after_warmup"] == 0
     assert data["tokens_per_sec"]["sequential"] > 0
+    # multi-device placement acceptance: each replica of the widened stage
+    # on its own device, >= 1.5x over serial, zero drops across the swap
+    dev = data["devices"]
+    assert dev["sim"]["speedup"] >= 1.5
+    assert dev["sim"]["distinct_devices"] == max(dev["sim"]["replicas"])
+    assert dev["sim"]["distinct_devices"] == dev["sim"]["n_devices"]
+    assert dev["sim"]["xfer_accounted"] is True
+    assert dev["sim"]["out_of_order"] == 0
+    assert dev["pinning"]["distinct"] == dev["sim"]["n_devices"]
+    assert dev["pinning"]["out_of_order"] == 0
+    assert dev["hot_swap"]["dropped"] == 0
+    assert dev["hot_swap"]["out_of_order"] == 0
 
 
 @pytest.mark.slow

@@ -48,9 +48,11 @@ def test_offloaded_function_matches_original():
     x = jnp.arange(8.0)
     off = courier_offload(app, x, db=db)
     np.testing.assert_allclose(off(x), app(x))
-    # db hit → hw, miss → sw (paper's placement rule)
-    placements = {n.fn_key: n.placement for n in off.ir.nodes}
+    # db hit → hw, miss → sw (paper's placement rule); the structured
+    # Placement carries the backend kind
+    placements = {n.fn_key: n.placement.kind for n in off.ir.nodes}
     assert placements == {"f1": "hw", "f2": "sw", "f3": "hw"}
+    assert off.ir.nodes[0].placement.is_hw
 
 
 def test_token_pipeline_equals_sequential():
@@ -134,7 +136,7 @@ def test_harris_app_end_to_end():
     np.testing.assert_allclose(off(img), app(img), rtol=1e-5, atol=1e-4)
     # normalize must remain a software function (no hw module, paper Table I)
     placements = {n.fn_key: n.placement for n in off.ir.nodes}
-    assert placements["normalize"] == "sw"
+    assert placements["normalize"].is_sw
 
 
 def test_harris_app_with_hw_kernels():
@@ -143,7 +145,7 @@ def test_harris_app_with_hw_kernels():
     app = corner_harris_demo(lib)
     img = jax.random.uniform(jax.random.PRNGKey(1), (32, 64, 3)) * 255
     off = courier_offload(app, img, db=db, prefer_hw=True)
-    hw = {n.fn_key for n in off.ir.nodes if n.placement == "hw"}
+    hw = {n.fn_key for n in off.ir.nodes if n.placement.is_hw}
     assert hw == {"cvtColor", "cornerHarris", "convertScaleAbs"}
     ref = app(img)
     got = off(img)
