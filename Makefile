@@ -3,7 +3,7 @@
 PY      ?= python
 PYPATH  := src:.
 
-.PHONY: test test-fast bench bench-smoke ci clean-autotune
+.PHONY: test test-fast bench bench-smoke lint ci clean-autotune
 
 test:            ## full tier-1 suite (incl. slow markers)
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
@@ -17,7 +17,10 @@ bench:           ## all paper tables + fusion + replan + replicate benchmarks; w
 bench-smoke:     ## 2-token pipeline + fusion + replan + replicate + devices (multi-device placement) smoke benchmark
 	PYTHONPATH=$(PYPATH) $(PY) benchmarks/run.py --smoke
 
-ci: test-fast bench-smoke  ## single CI entry point: fast tests, then smoke benchmark
+lint:            ## concurrency/style lint over the package (repro.analysis.lint)
+	PYTHONPATH=$(PYPATH) $(PY) -m repro.analysis lint src/repro
+
+ci: test-fast bench-smoke lint  ## single CI entry point: fast tests, smoke benchmark, lint
 
 clean-autotune:  ## drop the persistent block-size autotune cache
 	PYTHONPATH=$(PYPATH) $(PY) -c "from repro.kernels.autotune import \

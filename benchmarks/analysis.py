@@ -1,0 +1,95 @@
+"""Static-analysis overhead benchmark — the gate must be ~free.
+
+The plan verifier (:mod:`repro.analysis.verify`) runs on every
+``generate()``, every re-plan candidate, and every hot-swap.  That is only
+acceptable if verification costs a small fraction of building the plan it
+checks, so this benchmark times both over the same IR and reports the
+ratio.  Smoke mode *asserts* the ratio stays under 5% — the number CI
+holds the gate to (see EXPERIMENTS.md, "Static analysis").
+
+Also reports the lint wall-clock over ``src/repro`` (full mode only):
+informational, since lint runs once per ``make ci``, not per plan.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+N_NODES = 48
+REPS = 20
+
+
+def _best_ms(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best
+
+
+def verify_overhead(n_nodes: int = N_NODES, reps: int = REPS) -> dict:
+    """min-of-reps plan-build ms vs verify ms over an n-node chain."""
+    from repro.analysis import verify_plan
+    from repro.core import (DeviceInventory, assign_replicas, linear_ir,
+                            partition_optimal)
+
+    ir = linear_ir("bench", [f"f{i}" for i in range(n_nodes)],
+                   [1.0 + (i % 5) for i in range(n_nodes)],
+                   io_shape=(64, 96))
+    inv = DeviceInventory.host(8)
+
+    def build():
+        plan = partition_optimal(ir, max_stages=8)
+        assign_replicas(plan, ir, worker_budget=8, inventory=inv)
+        return plan
+
+    plan = build()
+    assert verify_plan(ir, plan, inventory=inv) == []
+    build_ms = _best_ms(build, reps)
+    verify_ms = _best_ms(lambda: verify_plan(ir, plan, inventory=inv), reps)
+    return {"n_nodes": n_nodes, "build_ms": round(build_ms, 4),
+            "verify_ms": round(verify_ms, 4),
+            "ratio": round(verify_ms / max(build_ms, 1e-9), 4)}
+
+
+def lint_wall_ms() -> dict:
+    from repro.analysis import lint_paths
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src", "repro")
+    t0 = time.perf_counter()
+    findings = lint_paths([src])
+    return {"ms": round((time.perf_counter() - t0) * 1e3, 1),
+            "findings": len(findings)}
+
+
+_payload_cache: dict = {}
+
+
+def payload(smoke: bool = False) -> dict:
+    if smoke not in _payload_cache:
+        out = {"verify": verify_overhead(reps=8 if smoke else REPS)}
+        if not smoke:
+            out["lint"] = lint_wall_ms()
+        else:
+            # the CI bar: verifying a committed plan must cost under 5% of
+            # building it, or the per-replan/per-swap gates are too hot
+            assert out["verify"]["ratio"] < 0.05, \
+                f"verifier overhead {out['verify']['ratio']:.1%} >= 5%"
+        _payload_cache[smoke] = out
+    return _payload_cache[smoke]
+
+
+def run() -> list:
+    p = payload()
+    v = p["verify"]
+    return [
+        ("analysis.verify.build_ms", v["build_ms"],
+         f"partition_optimal+assign_replicas over {v['n_nodes']} nodes"),
+        ("analysis.verify.verify_ms", v["verify_ms"],
+         f"all {v['n_nodes']}-node rules, pinned plan + inventory"),
+        ("analysis.verify.overhead", v["ratio"],
+         "verify_ms / build_ms; CI smoke bar is 0.05"),
+        ("analysis.lint.wall_ms", p["lint"]["ms"],
+         f"{p['lint']['findings']} findings over src/repro"),
+    ]

@@ -33,8 +33,8 @@ def _emit(mod) -> None:
 
 
 def main() -> None:
-    from benchmarks import (devices, fig4_callgraph, fusion, replan,
-                            replicate, roofline, table1_pipeline,
+    from benchmarks import (analysis, devices, fig4_callgraph, fusion,
+                            replan, replicate, roofline, table1_pipeline,
                             table2_modules, table3_resources)
 
     smoke = "--smoke" in sys.argv[1:]
@@ -74,6 +74,10 @@ def main() -> None:
             print(f"smoke.devices.pinned,{dev['sim']['distinct_devices']},"
                   f"{dev['pinning']['distinct']} distinct committed devices; "
                   f"{dev['hot_swap']['dropped']} dropped across swap")
+            ver = analysis.payload(smoke=True)["verify"]   # asserts < 5%
+            print(f"smoke.verify.overhead,{ver['ratio']},"
+                  f"verify {ver['verify_ms']} ms vs build {ver['build_ms']} "
+                  f"ms over {ver['n_nodes']} nodes")
             path = table1_pipeline.write_bench_json(smoke=True)
             print(f"smoke.bench_json,0,{path}")
         except Exception as e:
@@ -86,8 +90,8 @@ def main() -> None:
     # subprocesses are the noisiest neighbors for the wall-clock benchmarks
     # that precede them
     for mod in (table1_pipeline, table2_modules, table3_resources,
-                fig4_callgraph, fusion, roofline, replan, replicate,
-                devices):
+                fig4_callgraph, fusion, roofline, analysis, replan,
+                replicate, devices):
         _emit(mod)
     try:
         path = table1_pipeline.write_bench_json()

@@ -1,0 +1,30 @@
+"""Static analysis — plan/IR verifier + AST concurrency lint (ISSUE 6).
+
+Two halves, one Diagnostic vocabulary:
+
+* :mod:`repro.analysis.verify` — a pass pipeline over ``CourierIR`` +
+  ``PipelinePlan`` that statically checks dataflow well-formedness,
+  shape/dtype routing through fused nodes, placement legality, and fusion
+  (VMEM) legality *before* a plan is committed to traffic.  Wired as a
+  mandatory gate in ``PipelineGenerator.generate``, ``ElasticPlanner.
+  replan_from_profile`` and ``RequestQueueServer.swap_executor`` —
+  ``REPRO_VERIFY=off`` is the escape hatch.
+* :mod:`repro.analysis.lint` — an AST-based concurrency/style linter over
+  ``src/repro`` with a registered-rule framework (lock discipline,
+  blocking-calls-in-critical-sections, frozen dataclasses, placement
+  literals, acquire-without-finally, dead exports).
+
+CLI: ``python -m repro.analysis lint src/repro`` /
+``python -m repro.analysis verify ir.json [--plan plan.json]``.
+"""
+from .diagnostics import Diagnostic, PlanVerificationError, Severity
+from .lint import LINT_RULES, lint_paths
+from .verify import (VERIFY_ENV, VERIFY_RULES, check_plan, verify_enabled,
+                     verify_plan)
+
+__all__ = [
+    "Diagnostic", "Severity", "PlanVerificationError",
+    "verify_plan", "check_plan", "verify_enabled",
+    "VERIFY_ENV", "VERIFY_RULES",
+    "lint_paths", "LINT_RULES",
+]

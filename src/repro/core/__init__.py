@@ -18,8 +18,8 @@ from .costmodel import (CostModel, DeviceClass, DEVICE_CLASSES,
                         matmul_cost, measure_ms, measured_contradicts,
                         replicated_bottleneck_ms, stencil_cost, transfer_ms)
 from .database import ModuleDatabase, ModuleEntry, default_db
-from .executor import (ExecutorStats, PendingToken, PipelineExecutor,
-                       StageCounters)
+from .executor import (ExecutorClosed, ExecutorStats, PendingToken,
+                       PipelineExecutor, StageCounters)
 from .ir import CourierIR, Node, Value, linear_ir
 from .offloader import OffloadedFunction, OffloadPlan, courier_offload
 from .partition import (PipelinePlan, StagePlan, assign_replicas,
@@ -46,7 +46,8 @@ __all__ = [
     "matmul_cost", "measure_ms", "measured_contradicts",
     "replicated_bottleneck_ms", "stencil_cost", "transfer_ms",
     "ModuleDatabase", "ModuleEntry", "default_db",
-    "ExecutorStats", "PendingToken", "PipelineExecutor", "StageCounters",
+    "ExecutorClosed", "ExecutorStats", "PendingToken", "PipelineExecutor",
+    "StageCounters",
     "CourierIR", "Node", "Value", "linear_ir",
     "OffloadedFunction", "OffloadPlan", "courier_offload",
     "PipelinePlan", "StagePlan", "assign_replicas", "assign_stage_devices",

@@ -243,7 +243,7 @@ def stencil_cost(h: int, w: int, c: int, taps: int,
     return NodeCost(flops=2.0 * taps * numel, bytes_rw=2.0 * bytes_per_el * numel)
 
 
-def attention_cost(batch: int, q_len: int, kv_len: int, heads: int,
+def attention_cost(batch: int, q_len: int, kv_len: int, heads: int,  # lint: allow-dead(cost-model API for LM workloads; kept for config-driven planners)
                    head_dim: int, kv_heads: int | None = None,
                    window: int | None = None, bytes_per_el: int = 2) -> NodeCost:
     """QK^T + softmax + PV cost; sliding-window caps kv_len at window."""

@@ -72,7 +72,20 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["PipelineExecutor", "ExecutorStats", "StageCounters",
-           "PendingToken", "SubmitError"]
+           "PendingToken", "SubmitError", "ExecutorClosed"]
+
+
+class ExecutorClosed(RuntimeError):
+    """Submission raced (or followed) :meth:`PipelineExecutor.close`.
+
+    Raised instead of hanging: a submitter blocked on token-pool
+    backpressure when ``close()`` lands would otherwise be admitted into
+    already-closed replica rings, whose completion event never fires.
+    ``close()`` publishes ``closed`` under the executor lock *before*
+    draining, and the admission loop re-checks it under the same lock, so
+    every group that wins admission is visible to close's drain and every
+    loser gets this exception — never a silent drop.
+    """
 
 
 class SubmitError(RuntimeError):
@@ -239,7 +252,10 @@ class _SeqRing:
     def _idx(self, seq: int) -> int:
         return (seq // self.stride) % self.cap
 
-    def put(self, seq: int, group: "_Group") -> None:
+    def put(self, seq: int, group: "_Group") -> bool:
+        """False when the ring is closed (the group was NOT enqueued) —
+        callers must fail the group rather than wait on an event no
+        worker will ever set."""
         i = self._idx(seq)
         with self.cond:
             # capacity guard: unreachable while cap > token pool (the pool
@@ -247,9 +263,10 @@ class _SeqRing:
             while self.slots[i] is not None and not self.closed:
                 self.cond.wait()
             if self.closed:
-                return
+                return False
             self.slots[i] = (seq, group)
             self.cond.notify_all()
+            return True
 
     def pop(self) -> "tuple[int, _Group] | None":
         """Block for this replica's next owned seq; ``None`` once closed."""
@@ -525,7 +542,7 @@ class PipelineExecutor:
         already on the device.
         """
         if self.closed:
-            raise RuntimeError("executor is closed; build a fresh one")
+            raise ExecutorClosed("executor is closed; build a fresh one")
         toks = [t if isinstance(t, tuple) else (t,) for t in tokens]
         for i, t in enumerate(toks):
             if len(t) != len(self.graph_inputs):
@@ -536,6 +553,12 @@ class PipelineExecutor:
         for group_toks in self._group_tokens(toks):
             try:
                 handles.extend(self._admit(group_toks))
+            except ExecutorClosed:
+                if not handles:
+                    raise           # nothing issued: the clean "closed" case
+                raise SubmitError(
+                    f"executor closed after token {len(handles)}",
+                    handles) from None
             except BaseException as e:
                 raise SubmitError(
                     f"submit failed at token {len(handles)}: {e}",
@@ -596,10 +619,16 @@ class PipelineExecutor:
         """Drain in-flight work and shut down stage-worker threads.
 
         Sets ``closed`` so caches (e.g. ElasticPlanner's) never hand a
-        shut-down executor back out.
+        shut-down executor back out.  ``closed`` is published under the
+        executor lock BEFORE draining: a submitter racing this call either
+        wins its pool reservation first (its group is then in ``_inflight``
+        and the drain below retires it) or observes ``closed`` inside the
+        admission loop and raises :class:`ExecutorClosed` — it can never
+        be admitted into the rings this method is about to close.
         """
+        with self._lock:
+            self.closed = True
         self.drain()
-        self.closed = True
         if self._pools is not None:
             for p in self._pools:
                 p.shutdown(wait=True)
@@ -726,6 +755,12 @@ class PipelineExecutor:
         g.lock.acquire()
         while True:
             with self._lock:
+                if self.closed:
+                    # close() won the race: refuse admission instead of
+                    # parking tokens in rings whose workers are exiting
+                    g.lock.release()
+                    raise ExecutorClosed(
+                        "executor closed while waiting for pool capacity")
                 if not self._inflight or self._occupancy + size <= self.pool:
                     self._inflight.append(g)
                     if self._rings is not None:
@@ -815,9 +850,19 @@ class PipelineExecutor:
 
     # -- replicated-stage dataflow (sequence-numbered rings) ----------------- #
     def _route(self, si: int, seq: int, g: _Group) -> None:
-        """Hand a group to stage ``si``'s owning replica ring (seq mod r)."""
+        """Hand a group to stage ``si``'s owning replica ring (seq mod r).
+
+        A refused hand-off (ring already closed — only reachable if a
+        caller bypasses the admission-side closed check) poisons the group
+        and signals its completion event, so finalizers raise instead of
+        waiting forever on a worker that already exited.
+        """
         r = self.replicas[si]
-        self._rings[si][seq % r].put(seq, g)
+        if not self._rings[si][seq % r].put(seq, g):
+            if g.error is None:
+                g.error = ExecutorClosed(
+                    f"stage {si} ring closed before seq {seq} arrived")
+            g.evt.set()
 
     def _replica_loop(self, si: int, w: int) -> None:
         """Worker loop for replica ``w`` of stage ``si``.

@@ -25,7 +25,7 @@ cvtColor+cornerHarris "was too slow to use").
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Sequence
+from typing import Callable, Iterable, Sequence
 
 from .costmodel import (VMEM_BYTES, FusionEstimate, NodeCost, fused_cost,
                         replicated_bottleneck_ms, transfer_ms)
@@ -37,14 +37,15 @@ from .placement import (AUTO_BUDGET, DeviceInventory, Placement,
 __all__ = [
     "StagePlan", "PipelinePlan",
     "partition_paper", "partition_optimal", "fuse_adjacent_hw",
-    "fused_working_set_bytes", "make_model_fused_cost", "split_fused_node",
+    "fused_working_set_bytes", "working_set_bytes", "make_model_fused_cost",
+    "split_fused_node",
     "assign_replicas", "assign_stage_devices", "clear_stage_devices",
     "widen_for_deployment",
 ]
 
 
 @dataclass
-class StagePlan:
+class StagePlan:  # lint: allow-mutable(mutated in place by assign_replicas / assign_stage_devices / clear_stage_devices)
     node_names: list[str]
     est_time_ms: float
     kind: str = "parallel"            # "serial_in_order" | "parallel" (TBB)
@@ -64,7 +65,7 @@ class StagePlan:
 
 
 @dataclass
-class PipelinePlan:
+class PipelinePlan:  # lint: allow-mutable(stages re-widened/re-pinned in place across replans)
     stages: list[StagePlan]
     policy: str = "paper"
 
@@ -132,6 +133,27 @@ class PipelinePlan:
                         f"{s.est_time_ms:8.2f} ms{xfer}  "
                         f"{list(zip(s.node_names, s.placements))}")
         return "\n".join(rows)
+
+    # -- (de)serialization — verifier CLI / plan artifacts ------------------ #
+    def to_json(self) -> str:
+        import json
+        from dataclasses import asdict
+        return json.dumps({
+            "policy": self.policy,
+            "stages": [asdict(s) for s in self.stages],
+        }, indent=2)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PipelinePlan":
+        import json
+        d = json.loads(s)
+        stages = []
+        for sd in d["stages"]:
+            sd = dict(sd)
+            sd["placements"] = [Placement.parse(p)
+                                for p in sd.get("placements", [])]
+            stages.append(StagePlan(**sd))
+        return cls(stages=stages, policy=d.get("policy", "paper"))
 
 
 # --------------------------------------------------------------------------- #
@@ -508,26 +530,22 @@ def _clone_ir_shell(ir: CourierIR, name: str) -> CourierIR:
 
 
 
-def fused_working_set_bytes(ir: CourierIR, run: Sequence[Node], *,
-                            row_block: int = 8, halo_rows: int = 4,
-                            itemsize: int = 4) -> int:
-    """Resident VMEM bytes a row-block fused kernel needs for ``run``.
+def working_set_bytes(ir: CourierIR, value_names: "Iterable[str]", *,
+                      row_block: int = 8, halo_rows: int = 4,
+                      itemsize: int = 4) -> int:
+    """Resident VMEM bytes for one row-block tile of each named value.
 
-    A fused stencil/elementwise kernel keeps one row-block tile of every
-    value the run touches (inputs, intermediates, outputs) resident at once.
     For a value shaped ``(rows, ...)`` the tile is ``min(rows, row_block +
     halo_rows)`` rows of ``prod(shape[1:])`` elements; rank-0/1 values count
     whole (they are broadcast operands like norm scales).  ``halo_rows``
     over-approximates stencil halos so the check errs toward rejecting.
+    Shared by the fusion-time gate (:func:`fused_working_set_bytes`) and the
+    static verifier's ``vmem-spill`` re-check on committed plans.
     """
     import numpy as np
 
-    seen: set[str] = set()
-    for n in run:
-        seen.update(n.inputs)
-        seen.update(n.outputs)
     total = 0
-    for vn in seen:
+    for vn in set(value_names):
         v = ir.values[vn]
         if len(v.shape) >= 2:
             rows = min(v.shape[0], row_block + halo_rows)
@@ -536,6 +554,23 @@ def fused_working_set_bytes(ir: CourierIR, run: Sequence[Node], *,
         else:
             total += max(v.nbytes, itemsize)
     return total
+
+
+def fused_working_set_bytes(ir: CourierIR, run: Sequence[Node], *,
+                            row_block: int = 8, halo_rows: int = 4,
+                            itemsize: int = 4) -> int:
+    """Resident VMEM bytes a row-block fused kernel needs for ``run``.
+
+    A fused stencil/elementwise kernel keeps one row-block tile of every
+    value the run touches (inputs, intermediates, outputs) resident at once;
+    see :func:`working_set_bytes` for the per-value tile model.
+    """
+    seen: set[str] = set()
+    for n in run:
+        seen.update(n.inputs)
+        seen.update(n.outputs)
+    return working_set_bytes(ir, seen, row_block=row_block,
+                             halo_rows=halo_rows, itemsize=itemsize)
 
 
 def make_model_fused_cost(ir: CourierIR, *, vmem_bytes: int = VMEM_BYTES,

@@ -491,6 +491,11 @@ class PipelineGenerator:
                                      comm_bw_bytes_per_ms=comm_bw_bytes_per_ms)
         else:
             raise ValueError(f"unknown policy {policy!r}")
+        # mandatory legality gate (REPRO_VERIFY=off to bypass): a malformed
+        # plan must fail here, not as a wrong answer under traffic.  Lazy
+        # import — analysis sits above core in the layering.
+        from repro.analysis.verify import check_plan
+        check_plan(ir, plan, db=self.db, where="PipelineGenerator.generate")
         fns = make_stage_fns(ir, self.db, plan, jit=jit, donate=donate)
         return BuiltPipeline(ir=ir, plan=plan, stage_fns=fns,
                              graph_inputs=list(ir.graph_inputs),

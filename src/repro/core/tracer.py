@@ -50,7 +50,7 @@ def _current() -> "Any | None":
     return _state.stack[-1] if _state.stack else None
 
 
-def current_mode() -> str:
+def current_mode() -> str:  # lint: allow-dead(introspection API for user edit_ir hooks)
     ctx = _current()
     return getattr(ctx, "mode", "direct")
 

@@ -57,12 +57,13 @@ class AutotuneCache:
         return os.path.join(self.path, "autotune.json")
 
     def _load(self) -> dict[str, Any]:
+        # every caller (get/put/clear/info) already holds self._lock
         if self._mem is None:
             try:
                 with open(self.file) as f:
-                    self._mem = json.load(f)
+                    self._mem = json.load(f)  # owner: lock holder
             except (OSError, ValueError):
-                self._mem = {}
+                self._mem = {}  # owner: lock holder
         return self._mem
 
     def get(self, key: str) -> Any | None:

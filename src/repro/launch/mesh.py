@@ -26,7 +26,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _mesh(shape, axes)
 
 
-def make_pipeline_mesh(*, n_stages: int = 4, multi_pod: bool = False):
+def make_pipeline_mesh(*, n_stages: int = 4, multi_pod: bool = False):  # lint: allow-dead(pod mesh recipe for hillclimb/SPMD runs)
     """Courier pipeline mode: split the model axis into (stage, model).
 
     Same 256/512 chips, reshaped so the Pipeline Generator's stage

@@ -192,11 +192,21 @@ class RequestQueueServer:
 
     def swap_executor(self, new_executor: PipelineExecutor, *,
                       warm_args: tuple | None = None,
-                      timeout: float = 120.0) -> PipelineExecutor:
+                      timeout: float = 120.0,
+                      plan: Any = None, ir: Any = None,
+                      db: Any = None, inventory: Any = None,
+                      ) -> PipelineExecutor:
         """Zero-downtime executor hot-swap (the adaptive re-plan deploy).
 
         Sequence (documented in EXPERIMENTS.md):
 
+        0. **Verify off-path** — when the caller hands over the candidate's
+           ``plan`` + ``ir`` (and optionally its ``db``/``inventory``),
+           the static verifier re-checks the plan *before* warmup or
+           publication; a failing candidate raises
+           :class:`~repro.analysis.diagnostics.PlanVerificationError` and
+           the server keeps serving on the old executor — zero requests
+           dropped (``REPRO_VERIFY=off`` skips the gate).
         1. **Warm off-path** — when ``warm_args`` is given, the new
            executor's ``warmup`` compiles every bucket shape *before* it
            sees traffic, so the swap never pays a compile on the serving
@@ -215,6 +225,10 @@ class RequestQueueServer:
         server is not running) and returns the old executor — the caller
         may ``drain()``/``close()`` it once its stats are harvested.
         """
+        if plan is not None and ir is not None:
+            from repro.analysis.verify import check_plan
+            check_plan(ir, plan, db=db, inventory=inventory,
+                       where="RequestQueueServer.swap_executor")
         if warm_args is not None:
             new_executor.warmup(*warm_args)
         done = threading.Event()

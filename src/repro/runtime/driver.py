@@ -412,6 +412,20 @@ class ElasticPlanner:
                         f"{min_gain:.2f}x", old_bottleneck,
                         new_bottleneck, defused if not widened else [])
 
+        # static legality gate: a candidate that fails verification is
+        # DISCARDED — the current executor keeps serving, nothing is
+        # committed (no IR, no plan, no cache entry), and the decision
+        # records why.  Widening verifies against the current (possibly
+        # fused) IR; a re-balance against the staged (possibly defused) one.
+        from repro.analysis.verify import PlanVerificationError, check_plan
+        try:
+            check_plan(self.layer_ir if widened else ir, chosen,
+                       db=self.db, inventory=self.inventory,
+                       where="ElasticPlanner.replan_from_profile")
+        except PlanVerificationError as e:
+            return keep(f"candidate failed verification ({', '.join(e.rules)})",
+                        old_bottleneck, new_bottleneck)
+
         prof = new_profiler
         if prof is None and hasattr(profiler, "clone_for"):
             prof = profiler.clone_for(chosen.n_stages)

@@ -113,3 +113,26 @@ def test_vmem_working_set_documented():
     # q block + k/v full-seq refs + f32 acc + score block
     working = (bq * hd * 2 + 2 * M * hd * 2 + bq * hd * 4 + bq * bk * 4)
     assert working < VMEM_BYTES
+
+
+def test_kernel_switch_and_fused_harris_response():
+    """The ops-layer dispatch switch: ``use_kernels`` flips what
+    ``kernels_enabled`` reports, and the single-call ``harris_response``
+    matches the three-step reference chain on the default (sw) path."""
+    from repro.kernels.ops import (harris_response, kernels_enabled,
+                                   use_kernels)
+    assert not kernels_enabled()           # CPU container default: refs
+    use_kernels(True)
+    try:
+        assert kernels_enabled()
+    finally:
+        use_kernels(False)
+    assert not kernels_enabled()
+
+    img = jax.random.uniform(KEY, (32, 48, 3)) * 255.0
+    got = harris_response(img)
+    want = ref.reference_convert_scale_abs(
+        ref.reference_corner_harris(ref.reference_cvt_color(img), 2, 0.04),
+        1.0, 0.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)

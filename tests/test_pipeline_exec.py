@@ -127,3 +127,57 @@ def test_spmd_pipeline_multidevice_subprocess():
                        capture_output=True, text=True, timeout=300,
                        env=env)
     assert "SPMD-OK" in r.stdout, r.stderr[-2000:]
+
+
+# --------------------------------------------------------------------------- #
+# SPMD building blocks, tested directly (not just via pipeline_microbatches)
+# --------------------------------------------------------------------------- #
+def test_stack_stage_params_pads_and_counts():
+    from repro.core import stack_stage_params
+    L = 5
+    params = {"w": jnp.arange(float(L)).reshape(L, 1)}
+    staged, lengths = stack_stage_params(params, [0, 3])
+    assert staged["w"].shape == (2, 3, 1)          # padded to Lmax=3
+    np.testing.assert_array_equal(np.asarray(lengths), [3, 2])
+    np.testing.assert_allclose(np.asarray(staged["w"][1, :, 0]),
+                               [3.0, 4.0, 0.0])    # zero-padded tail
+    with pytest.raises(ValueError, match="start at 0"):
+        stack_stage_params(params, [1, 3])
+    with pytest.raises(ValueError, match="empty stage"):
+        stack_stage_params(params, [0, 5])
+
+
+def test_stage_apply_masks_padding_layers():
+    from repro.core import stage_apply
+
+    def block(p, h):
+        return h + p["b"]
+    stage_params = {"b": jnp.array([1.0, 10.0, 100.0])}
+    assert float(stage_apply(block, stage_params, jnp.int32(3),
+                             jnp.zeros(()))) == 111.0
+    # the masked tail layer (the 100.0) must not run
+    assert float(stage_apply(block, stage_params, jnp.int32(2),
+                             jnp.zeros(()))) == 11.0
+
+
+def test_spmd_pipeline_fn_matches_sequential_under_vmap():
+    """Drive the shard_map-interior function with vmap's named axis (one
+    stage: the ICI hand-off is skipped, which is exactly what vmap's
+    ppermute rule requires): every microbatch retires with all L layers
+    applied in order."""
+    from repro.core import spmd_pipeline_fn, stack_stage_params
+    L, M = 4, 3
+    params = {"b": jnp.arange(1.0, L + 1.0)}       # layer i adds i+1
+    staged, lengths = stack_stage_params(params, [0])
+
+    def block(p, h):
+        return h + p["b"]
+    fn = spmd_pipeline_fn(block, 1)
+    xs = jnp.arange(float(M * 2)).reshape(M, 2)
+    per_dev = jax.tree.map(lambda a: a[:, None], staged)   # [S, 1, Lmax, ...]
+    out = jax.vmap(fn, in_axes=(0, None, None),
+                   axis_name="stage")(per_dev, lengths, xs)
+    assert out.shape == (1, M, 2)
+    np.testing.assert_allclose(np.asarray(out[-1]),
+                               np.asarray(xs + jnp.sum(params["b"])),
+                               rtol=1e-6)

@@ -1,8 +1,8 @@
 """Structured placement layer: Placement parsing, the device inventory,
 the budget governor, device-aware replica assignment + transfer accounting,
-replication-aware batching — and the grep-guard that keeps raw "hw"/"sw"
-string literals out of every module except the back-compat parser."""
-import ast
+replication-aware batching — and the lint gate (repro.analysis.lint) that
+keeps raw "hw"/"sw" string literals out of every module except the
+back-compat parser."""
 import os
 
 import numpy as np
@@ -76,48 +76,20 @@ def test_node_placement_parses_strings_and_json_roundtrips():
 
 
 # --------------------------------------------------------------------------- #
-# Grep-guard: no raw "hw"/"sw" literals outside the back-compat parser
+# Lint gate: the AST grep-guard now lives in repro.analysis.lint as the
+# `placement-literal` rule (plus the concurrency/style rules); this test
+# just asserts the linter reports zero findings over src/.
 # --------------------------------------------------------------------------- #
-def _code_string_literals(path: str) -> list[tuple[int, str]]:
-    """All non-docstring string constants equal to a placement kind."""
-    with open(path) as f:
-        tree = ast.parse(f.read(), filename=path)
-    docstrings: set[int] = set()
-    for node in ast.walk(tree):
-        if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
-                             ast.AsyncFunctionDef)):
-            body = getattr(node, "body", [])
-            if body and isinstance(body[0], ast.Expr) and \
-                    isinstance(body[0].value, ast.Constant) and \
-                    isinstance(body[0].value.value, str):
-                docstrings.add(id(body[0].value))
-    hits = []
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Constant) and node.value in ("hw", "sw") \
-                and id(node) not in docstrings:
-            hits.append((node.lineno, node.value))
-    return hits
-
-
-def test_no_raw_placement_literals_outside_parser():
+def test_lint_clean_over_src():
     """Every "hw"/"sw" comparison must go through repro.core.placement —
-    a raw string literal elsewhere is a refactor leak waiting to diverge
-    from the structured Placement (docstrings are exempt; code is not)."""
-    offenders = {}
-    for root, _dirs, files in os.walk(SRC):
-        for fname in files:
-            if not fname.endswith(".py"):
-                continue
-            path = os.path.join(root, fname)
-            rel = os.path.relpath(path, SRC)
-            if rel == os.path.join("core", "placement.py"):
-                continue                        # THE back-compat parser
-            hits = _code_string_literals(path)
-            if hits:
-                offenders[rel] = hits
-    assert not offenders, (
-        "raw placement-kind string literals outside the parser:\n  "
-        + "\n  ".join(f"{f}: {h}" for f, h in sorted(offenders.items())))
+    a raw string literal elsewhere is a refactor leak (docstrings exempt).
+    That rule, and the rest of the lint catalog (lock-discipline,
+    blocking-in-lock, frozen-dataclass, acquire-without-finally,
+    dead-export), must hold across the whole tree."""
+    from repro.analysis.lint import lint_paths
+    findings = lint_paths([SRC])
+    assert not findings, "lint findings over src/:\n  " + \
+        "\n  ".join(d.format() for d in findings)
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,612 @@
+"""Static analysis gates: plan verifier corruption classes, gated call
+sites (generate / replan / hot-swap), the ExecutorClosed race fix, and
+unit tests for every lint rule (repro.analysis.lint)."""
+import copy
+import textwrap
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (PlanVerificationError, check_plan, verify_plan,
+                            VERIFY_RULES)
+from repro.analysis.diagnostics import ERROR, WARNING
+from repro.analysis.lint import (FILE_RULES, LINT_RULES, PROJECT_RULES,
+                                 LintContext, lint_file)
+from repro.core import (DeviceInventory, ExecutorClosed, Frontend, Library,
+                        ModuleDatabase, PipelineGenerator, Placement,
+                        StageProfiler, assign_replicas, linear_ir,
+                        partition_optimal)
+from repro.core.executor import SubmitError
+from repro.core.ir import CourierIR, Node
+from repro.core.partition import PipelinePlan
+from repro.launch.serve import RequestQueueServer
+from repro.runtime import ElasticPlanner
+
+IO = (64, 96)
+
+
+# --------------------------------------------------------------------------- #
+# fixtures
+# --------------------------------------------------------------------------- #
+def _linear():
+    """Known-good 4-node chain and its 3-stage optimal plan."""
+    ir = linear_ir("t", ["a", "b", "c", "d"], [1.0, 4.0, 2.0, 1.0],
+                   io_shape=IO)
+    plan = partition_optimal(ir, max_stages=3)
+    assert [s.node_names for s in plan.stages] == \
+        [["a_0"], ["b_1"], ["c_2", "d_3"]]
+    return ir, plan
+
+
+def _sw_db():
+    db = ModuleDatabase("t")
+    for k in ("a", "b", "c", "d"):
+        db.register(k, software=lambda x: x)
+    return db
+
+
+def _pinned():
+    """The linear plan widened + pinned onto a 4-device host inventory."""
+    ir, plan = _linear()
+    inv = DeviceInventory.host(4)
+    assign_replicas(plan, ir, worker_budget=4, inventory=inv)
+    assert plan.replicas == [1, 2, 1]           # stage #1 is the widened one
+    return ir, plan, inv
+
+
+def _fused(rows=64, cols=96):
+    """Hand-built IR holding one fused hw node a_0+b_1 (d0 -> d1 -> d2)."""
+    ir = CourierIR("fz")
+    for v in ("d0", "d1", "d2"):
+        ir.add_value(v, (rows, cols), "float32")
+    ir.add_node(Node(
+        name="a_0+b_1", fn_key="a+b", inputs=["d0"], outputs=["d2"],
+        time_ms=1.0, placement=Placement.hw(),
+        fused_from=["a_0", "b_1"],
+        fused_input_shapes=[[(rows, cols)], [(rows, cols)]],
+        fused_params=[{}, {}],
+        fused_part_inputs=[["d0"], ["d1"]],
+        fused_part_outputs=[["d1"], ["d2"]]))
+    ir.graph_inputs = ["d0"]
+    ir.graph_outputs = ["d2"]
+    plan = partition_optimal(ir, max_stages=1)
+    return ir, plan
+
+
+def _jit_pipe():
+    """A tiny traced+generated pipeline (mul2 -> add1 -> sq)."""
+    db = ModuleDatabase("t")
+    db.register("mul2", software=lambda x: x * 2.0)
+    db.register("add1", software=lambda x: x + 1.0)
+    db.register("sq", software=lambda x: x * x)
+    lib = Library(db)
+
+    def app(x):
+        return lib.sq(lib.add1(lib.mul2(x)))
+    ir, _ = Frontend(db).trace(app, jnp.arange(4.0), profile=False)
+    for n in ir.nodes:
+        n.time_ms = 1.0
+    return db, ir
+
+
+def _feed(prof, stage_times, n=8):
+    for _ in range(n):
+        for k, t in enumerate(stage_times):
+            prof.record(k, t)
+
+
+# --------------------------------------------------------------------------- #
+# clean plans verify clean (incl. the deliberately-legal replan patterns)
+# --------------------------------------------------------------------------- #
+def test_clean_serial_plan_has_no_findings():
+    ir, plan = _linear()
+    assert verify_plan(ir, plan, db=_sw_db()) == []
+
+
+def test_clean_pinned_plan_and_replan_candidate_pattern_are_legal():
+    ir, plan, inv = _pinned()
+    db = _sw_db()
+    assert verify_plan(ir, plan, db=db, inventory=inv) == []
+    # the replanner's pinned-candidate normalization: keep devices, drop
+    # speeds and transfer charges — must stay legal, not a replica-vector
+    for s in plan.stages:
+        s.xfer_in_ms = 0.0
+        s.device_speeds = []
+    assert verify_plan(ir, plan, db=db, inventory=inv) == []
+
+
+def test_clean_fused_plan_has_no_findings():
+    ir, plan = _fused()
+    assert verify_plan(ir, plan, db=_sw_db()) == []
+
+
+def test_plan_json_round_trip_verifies_clean():
+    ir, plan, inv = _pinned()
+    plan2 = PipelinePlan.from_json(plan.to_json())
+    assert [s.node_names for s in plan2.stages] == \
+        [s.node_names for s in plan.stages]
+    assert plan2.replicas == plan.replicas
+    assert verify_plan(ir, plan2, db=_sw_db(), inventory=inv) == []
+
+
+# --------------------------------------------------------------------------- #
+# corruption classes -> rule ids (the acceptance matrix)
+# --------------------------------------------------------------------------- #
+def _mut_drop_producer(ir, plan):
+    ir.nodes = [n for n in ir.nodes if n.name != "b_1"]
+    for s in plan.stages:
+        s.node_names = [nn for nn in s.node_names if nn != "b_1"]
+
+
+def _mut_reverse_stages(ir, plan):
+    plan.stages = list(reversed(plan.stages))
+
+
+def _mut_duplicate_node(ir, plan):
+    plan.stages[-1].node_names.append("a_0")
+
+
+def _mut_phantom_node(ir, plan):
+    plan.stages[0].node_names.append("ghost_9")
+
+
+def _mut_missing_output(ir, plan):
+    ir.graph_outputs = ["never_made"]
+
+
+def _mut_phantom_xfer(ir, plan):
+    plan.stages[0].xfer_in_ms = 1.5
+
+
+def _mut_zero_replicas(ir, plan):
+    plan.stages[1].replicas = 0
+
+
+LINEAR_CORRUPTIONS = [
+    ("drop-producer", "produced-once", _mut_drop_producer),
+    ("reverse-stages", "stage-order", _mut_reverse_stages),
+    ("duplicate-node", "stage-coverage", _mut_duplicate_node),
+    ("phantom-node", "stage-coverage", _mut_phantom_node),
+    ("missing-output", "output-missing", _mut_missing_output),
+    ("phantom-xfer", "phantom-xfer", _mut_phantom_xfer),
+    ("zero-replicas", "replica-vector", _mut_zero_replicas),
+]
+
+
+@pytest.mark.parametrize("rule,mutate",
+                         [(r, m) for _id, r, m in LINEAR_CORRUPTIONS],
+                         ids=[c[0] for c in LINEAR_CORRUPTIONS])
+def test_linear_corruption_flags_rule(rule, mutate):
+    ir, plan = _linear()
+    mutate(ir, plan)
+    diags = verify_plan(ir, plan)
+    assert rule in {d.rule for d in diags}, \
+        "\n".join(d.format() for d in diags)
+    assert all(d.severity == ERROR for d in diags if d.rule == rule)
+
+
+def _mut_serial_widened(ir, plan):
+    ir.node("b_1").serial_only = True
+
+
+def _mut_truncate_speeds(ir, plan):
+    plan.stages[1].device_speeds = [1.0]        # widened stage: 2 replicas
+
+
+def _mut_bad_ordinal(ir, plan):
+    plan.stages[0].devices = [99]
+
+
+PINNED_CORRUPTIONS = [
+    ("serial-only-widened", "serial-only-widened", _mut_serial_widened),
+    ("truncate-speeds", "replica-vector", _mut_truncate_speeds),
+    ("bad-ordinal", "device-ordinal", _mut_bad_ordinal),
+]
+
+
+@pytest.mark.parametrize("rule,mutate",
+                         [(r, m) for _id, r, m in PINNED_CORRUPTIONS],
+                         ids=[c[0] for c in PINNED_CORRUPTIONS])
+def test_pinned_corruption_flags_rule(rule, mutate):
+    ir, plan, inv = _pinned()
+    mutate(ir, plan)
+    diags = verify_plan(ir, plan, inventory=inv)
+    assert rule in {d.rule for d in diags}, \
+        "\n".join(d.format() for d in diags)
+
+
+def test_hw_placement_without_accelerated_module_flags():
+    ir, plan = _linear()
+    node = ir.node("c_2")
+    node.placement = Placement.hw()
+    for s in plan.stages:
+        if "c_2" in s.node_names and s.placements:
+            s.placements[s.node_names.index("c_2")] = Placement.hw()
+    rules = {d.rule for d in verify_plan(ir, plan, db=_sw_db())}
+    assert "hw-unresolvable" in rules
+
+
+def test_fused_routing_truncation_flags():
+    ir, plan = _fused()
+    ir.nodes[0].fused_part_inputs = ir.nodes[0].fused_part_inputs[:1]
+    rules = {d.rule for d in verify_plan(ir, plan)}
+    assert "fused-routing" in rules
+
+
+def test_fused_shape_drift_flags():
+    ir, plan = _fused()
+    ir.nodes[0].fused_input_shapes = [[(8, 8)], [(64, 96)]]
+    rules = {d.rule for d in verify_plan(ir, plan)}
+    assert "shape-mismatch" in rules
+
+
+def test_fused_vmem_spill_flags():
+    ir, plan = _fused(rows=4096, cols=4_000_000)     # tiles alone spill VMEM
+    rules = {d.rule for d in verify_plan(ir, plan)}
+    assert "vmem-spill" in rules
+
+
+def test_nonfinite_stage_time_is_warning_not_error():
+    ir, plan = _linear()
+    plan.stages[0].est_time_ms = float("nan")
+    diags = verify_plan(ir, plan)
+    assert {d.rule for d in diags} == {"stage-time"}
+    assert all(d.severity == WARNING for d in diags)
+    # check_plan passes warnings through without raising
+    assert [d.rule for d in check_plan(ir, plan)] == ["stage-time"]
+
+
+def test_rule_catalog_is_complete():
+    expected = {"stage-coverage", "stage-order", "produced-once",
+                "output-missing", "fused-routing", "shape-mismatch",
+                "hw-unresolvable", "replica-vector", "device-ordinal",
+                "serial-only-widened", "phantom-xfer", "vmem-spill",
+                "stage-time"}
+    assert expected <= set(VERIFY_RULES)
+    assert {"placement-literal", "lock-discipline", "blocking-in-lock",
+            "frozen-dataclass", "acquire-without-finally",
+            "dead-export"} <= set(LINT_RULES)
+
+
+# --------------------------------------------------------------------------- #
+# check_plan: raise semantics + REPRO_VERIFY escape hatch
+# --------------------------------------------------------------------------- #
+def test_check_plan_raises_with_where_and_rules(monkeypatch):
+    ir, plan = _linear()
+    plan.stages = list(reversed(plan.stages))
+    with pytest.raises(PlanVerificationError) as ei:
+        check_plan(ir, plan, where="unit-test")
+    e = ei.value
+    assert e.where == "unit-test" and "unit-test" in str(e)
+    assert "stage-order" in e.rules and e.diagnostics
+    monkeypatch.setenv("REPRO_VERIFY", "off")
+    assert check_plan(ir, plan, where="unit-test") == []
+
+
+# --------------------------------------------------------------------------- #
+# gate 1: PipelineGenerator.generate
+# --------------------------------------------------------------------------- #
+def _corrupting_partition(module, name, corrupt):
+    real = getattr(module, name)
+
+    def wrapper(ir, **kw):
+        plan = real(ir, **kw)
+        corrupt(plan)
+        return plan
+    return wrapper
+
+
+def test_generate_gate_rejects_corrupt_partition(monkeypatch):
+    import repro.core.pipeline as pl
+    db, ir = _jit_pipe()
+    monkeypatch.setattr(pl, "partition_paper", _corrupting_partition(
+        pl, "partition_paper",
+        lambda plan: setattr(plan.stages[0], "xfer_in_ms", 5.0)))
+    with pytest.raises(PlanVerificationError) as ei:
+        PipelineGenerator(db).generate(ir, n_threads=2)
+    assert "phantom-xfer" in ei.value.rules
+    assert "generate" in ei.value.where
+
+
+def test_generate_gate_env_off_builds_and_computes(monkeypatch):
+    import repro.core.pipeline as pl
+    db, ir = _jit_pipe()
+    monkeypatch.setattr(pl, "partition_paper", _corrupting_partition(
+        pl, "partition_paper",
+        lambda plan: setattr(plan.stages[0], "xfer_in_ms", 5.0)))
+    monkeypatch.setenv("REPRO_VERIFY", "off")
+    pipe = PipelineGenerator(db).generate(ir, n_threads=2)
+    x = jnp.arange(4.0)
+    np.testing.assert_allclose(np.asarray(pipe(x)),
+                               np.asarray((x * 2.0 + 1.0) ** 2), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# gate 2: ElasticPlanner.replan_from_profile discards failing candidates
+# --------------------------------------------------------------------------- #
+def _sim_db(keys):
+    db = ModuleDatabase("sim")
+    for k in keys:
+        def impl(x, _k=k):
+            return np.asarray(x) + 1.0
+        impl.__name__ = k
+        db.register(k, software=impl)
+    return db
+
+
+def test_replan_gate_discards_corrupt_candidate(monkeypatch):
+    import repro.runtime.driver as drv
+    keys = [f"f{i}" for i in range(6)]
+    ir = linear_ir("sim", keys, [2.0] * 6, io_shape=(4,))
+    planner = ElasticPlanner(ir, db=_sim_db(keys))
+    planner.executor_for(3, jit=False)
+    before = [list(s.node_names) for s in planner.current_plan.stages]
+
+    monkeypatch.setattr(drv, "partition_optimal", _corrupting_partition(
+        drv, "partition_optimal",
+        lambda plan: plan.stages.reverse()))
+    prof = StageProfiler(3, min_samples=4)
+    _feed(prof, [4.0, 12.0, 4.0])          # would normally trigger a replan
+    d = planner.replan_from_profile(prof, max_stages=6, jit=False)
+    assert not d.replanned
+    assert "failed verification" in d.reason
+    assert "stage-order" in d.reason or "produced-once" in d.reason
+    assert planner.replans == 0
+    assert [list(s.node_names) for s in planner.current_plan.stages] == before
+
+
+def test_replan_gate_mid_stream_serves_every_request(monkeypatch):
+    """A corrupted candidate rejected mid-stream: the old executor keeps
+    serving and not a single request is dropped."""
+    import repro.runtime.driver as drv
+    keys = [f"g{i}" for i in range(4)]
+    ir = linear_ir("sim2", keys, [2.0] * 4, io_shape=(4,))
+    planner = ElasticPlanner(ir, db=_sim_db(keys))
+    ex, _ = planner.executor_for(2, jit=False, max_in_flight=4)
+    monkeypatch.setattr(drv, "partition_optimal", _corrupting_partition(
+        drv, "partition_optimal",
+        lambda plan: plan.stages.reverse()))
+
+    toks = [np.full((4,), float(i)) for i in range(12)]
+    with RequestQueueServer(ex, max_batch=2, max_wait_ms=2.0) as srv:
+        reqs = [srv.submit(t) for t in toks[:6]]
+        prof = StageProfiler(2, min_samples=4)
+        _feed(prof, [8.0, 24.0])
+        d = planner.replan_from_profile(prof, max_stages=4, jit=False)
+        assert not d.replanned and "failed verification" in d.reason
+        reqs += [srv.submit(t) for t in toks[6:]]
+        got = [r.wait(timeout=60.0) for r in reqs]      # zero drops
+    for i, g in enumerate(got):
+        np.testing.assert_allclose(np.asarray(g),
+                                   np.full((4,), float(i)) + 4.0)
+    st = srv.stats()
+    assert st["requests_served"] == 12 and st["swaps"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# gate 3: RequestQueueServer.swap_executor refuses a corrupted plan
+# --------------------------------------------------------------------------- #
+def test_swap_gate_refuses_corrupt_plan_then_accepts_valid_one():
+    db, ir = _jit_pipe()
+    pipe = PipelineGenerator(db).generate(ir, n_threads=2)
+    toks = [jnp.full((4,), float(i + 1)) for i in range(8)]
+    want = pipe.run_sequential(toks)
+    ex_a = pipe.executor(max_in_flight=4)
+    ex_b = pipe.executor(max_in_flight=4)
+    bad = copy.deepcopy(pipe.plan)
+    bad.stages = list(reversed(bad.stages))
+
+    with RequestQueueServer(ex_a, max_batch=2, max_wait_ms=2.0) as srv:
+        reqs = [srv.submit(t) for t in toks[:4]]
+        with pytest.raises(PlanVerificationError) as ei:
+            srv.swap_executor(ex_b, plan=bad, ir=pipe.ir, db=db)
+        assert "swap_executor" in ei.value.where
+        assert srv.executor is ex_a and srv.swaps == 0   # swap refused
+        # the same swap with the real plan passes the gate
+        old = srv.swap_executor(ex_b, plan=pipe.plan, ir=pipe.ir, db=db,
+                                warm_args=(toks[0],))
+        assert old is ex_a and srv.executor is ex_b and srv.swaps == 1
+        reqs += [srv.submit(t) for t in toks[4:]]
+        got = [r.wait(timeout=60.0) for r in reqs]       # zero drops
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-6)
+    assert srv.stats()["requests_served"] == 8
+
+
+# --------------------------------------------------------------------------- #
+# ExecutorClosed: the close/submit race ends in an exception, not a hang
+# --------------------------------------------------------------------------- #
+def test_submit_after_close_raises_executor_closed():
+    db, ir = _jit_pipe()
+    pipe = PipelineGenerator(db).generate(ir, n_threads=2)
+    ex = pipe.executor(max_in_flight=4)
+    x = jnp.arange(4.0)
+    ex.run([x])
+    ex.close()
+    with pytest.raises(ExecutorClosed):
+        ex.submit_many([x])
+    ex.close()                                  # idempotent
+
+
+def test_concurrent_close_and_submit_does_not_hang():
+    db, ir = _jit_pipe()
+    pipe = PipelineGenerator(db).generate(ir, n_threads=2)
+    ex = pipe.executor(max_in_flight=2)
+    x = jnp.arange(4.0)
+    ex.run([x])                                 # compile before racing
+    errs, served = [], [0]
+
+    def feeder():
+        try:
+            for _ in range(500):
+                for h in ex.submit_many([x]):
+                    h.result()
+                served[0] += 1
+        except (ExecutorClosed, SubmitError) as e:
+            errs.append(e)
+
+    t = threading.Thread(target=feeder)
+    t.start()
+    time.sleep(0.05)
+    ex.close()
+    t.join(timeout=30.0)
+    assert not t.is_alive(), "submit hung against close()"
+    assert errs or served[0] == 500             # race lost -> clean error
+    st = ex.stats()
+    assert st.tokens_admitted == st.tokens_retired   # nothing leaked
+
+
+# --------------------------------------------------------------------------- #
+# lint rules (file rules via lint_file over synthetic modules)
+# --------------------------------------------------------------------------- #
+def _findings(rule, path, src):
+    ctx = LintContext(path, textwrap.dedent(src))
+    return [d for d in lint_file(ctx) if d.rule == rule]
+
+
+def test_lint_placement_literal():
+    src = 'MODE = "hw"\n'
+    assert len(_findings("placement-literal",
+                         "src/repro/core/pipeline.py", src)) == 1
+    # the parser module itself is the one place allowed to spell them
+    assert _findings("placement-literal",
+                     "src/repro/core/placement.py", src) == []
+    # docstrings are exempt; suppression comment works
+    assert _findings("placement-literal", "src/repro/core/x.py",
+                     'def f():\n    "hw"\n') == []
+    assert _findings("placement-literal", "src/repro/core/x.py",
+                     'M = "hw"  # lint: ignore[placement-literal]\n') == []
+
+
+LOCKED_CLASS = """
+import threading
+
+class Box:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0
+
+    def bump(self):
+        with self._lock:
+            self.n += 1
+
+    def sneak(self):
+        self.n = 5{owner}
+"""
+
+
+def test_lint_lock_discipline():
+    bad = LOCKED_CLASS.format(owner="")
+    finds = _findings("lock-discipline", "m.py", bad)
+    assert len(finds) == 1 and "n" in finds[0].message
+    ok = LOCKED_CLASS.format(owner="  # owner: stats thread")
+    assert _findings("lock-discipline", "m.py", ok) == []
+
+
+def test_lint_blocking_in_lock():
+    bad = """
+    class Q:
+        def take(self, fut):
+            with self._lock:
+                return fut.result()
+    """
+    assert len(_findings("blocking-in-lock", "m.py", bad)) == 1
+    bounded = """
+    class Q:
+        def take(self, fut):
+            with self._lock:
+                return fut.result(timeout=1.0)
+    """
+    assert _findings("blocking-in-lock", "m.py", bounded) == []
+    sleepy = """
+    import time
+
+    class Q:
+        def nap(self):
+            with self._lock:
+                time.sleep(1.0)
+    """
+    assert len(_findings("blocking-in-lock", "m.py", sleepy)) == 1
+
+
+DATACLASS_SRC = """
+from dataclasses import dataclass
+
+@dataclass{frozen}
+class P:{pragma}
+    x: int = 0
+"""
+
+
+def test_lint_frozen_dataclass():
+    bad = DATACLASS_SRC.format(frozen="", pragma="")
+    assert len(_findings("frozen-dataclass",
+                         "src/repro/analysis/synth.py", bad)) == 1
+    # out of scope -> no finding even when mutable
+    assert _findings("frozen-dataclass",
+                     "src/repro/core/executor.py", bad) == []
+    frozen = DATACLASS_SRC.format(frozen="(frozen=True)", pragma="")
+    assert _findings("frozen-dataclass",
+                     "src/repro/analysis/synth.py", frozen) == []
+    allowed = DATACLASS_SRC.format(
+        frozen="", pragma="  # lint: allow-mutable(test double)")
+    assert _findings("frozen-dataclass",
+                     "src/repro/analysis/synth.py", allowed) == []
+
+
+def test_lint_acquire_without_finally():
+    bad = """
+    def f(lock):
+        lock.acquire()
+        work()
+        lock.release()
+    """
+    finds = _findings("acquire-without-finally", "m.py", bad)
+    assert len(finds) == 1 and "lock.acquire()" in finds[0].message
+    good = """
+    def f(lock):
+        lock.acquire()
+        try:
+            work()
+        finally:
+            lock.release()
+    """
+    assert _findings("acquire-without-finally", "m.py", good) == []
+
+
+def test_lint_dead_export():
+    rule = PROJECT_RULES["dead-export"]
+    mod_a = LintContext("src/pkg/a.py", textwrap.dedent("""
+        def used():
+            return 1
+
+        def dead():
+            return 2
+
+        def kept():  # lint: allow-dead(public API)
+            return 3
+
+        def helper():
+            return 4
+
+        def recursive():
+            return recursive()
+
+        _x = helper()
+    """))
+    mod_b = LintContext("src/pkg/b.py", "from pkg.a import used\n")
+    init = LintContext("src/pkg/__init__.py", "from .a import dead\n")
+    finds = list(rule([mod_a], [mod_a, mod_b, init]))
+    flagged = {d.message.split("'")[1] for d in finds}
+    # 'dead' is only re-exported by the facade (doesn't count); 'recursive'
+    # only references itself; 'helper' is genuinely used in-module; 'kept'
+    # carries the pragma
+    assert flagged == {"dead", "recursive"}
+
+
+def test_lint_file_runs_all_file_rules():
+    assert set(FILE_RULES) <= set(LINT_RULES)
+    assert lint_file(LintContext("clean.py", "X = 1\n")) == []
