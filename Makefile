@@ -11,10 +11,10 @@ test:            ## full tier-1 suite (incl. slow markers)
 test-fast:       ## fast split (excludes @slow: subprocess/multi-device/soak tests)
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q -m "not slow"
 
-bench:           ## all paper tables + fusion + replan + replicate benchmarks; writes BENCH_pipeline.json
+bench:           ## all paper tables + fusion + replan + replicate + faults benchmarks; writes BENCH_pipeline.json
 	PYTHONPATH=$(PYPATH) $(PY) benchmarks/run.py
 
-bench-smoke:     ## 2-token pipeline + fusion + replan + replicate + devices (multi-device placement) smoke benchmark
+bench-smoke:     ## 2-token pipeline + fusion + replan + replicate + devices + faults (device-loss recovery) smoke benchmark
 	PYTHONPATH=$(PYPATH) $(PY) benchmarks/run.py --smoke
 
 lint:            ## concurrency/style lint over the package (repro.analysis.lint)

@@ -1,0 +1,319 @@
+"""Fault-tolerance benchmark — device loss and transient bursts, zero drops.
+
+Courier-FPGA accelerates a *running* binary, so the built pipeline must
+survive its runtime: a hardware module dropping out mid-stream has to
+degrade the pipeline, not kill it.  Three scenarios exercise the whole
+fault path (injector -> executor retry/quarantine -> inventory diff ->
+survivors re-plan -> zero-drop hot-swap):
+
+1. **device_loss** — a sleep-backed chain widened onto a 4-device
+   inventory serves through :class:`RequestQueueServer`; mid-run a
+   scripted :class:`DeviceLostError` pulls one of the wide stage's
+   devices.  The executor quarantines the replica pinned there (sibling
+   replicas absorb its sequence numbers), ``DeviceInventory.refresh``
+   diffs the surviving devices, ``replan_on_inventory_change`` re-widens
+   onto them, and ``swap_executor`` deploys.  Acceptance: **0 dropped
+   requests, 0 out-of-order retirements, post-recovery throughput >=
+   0.8x the survivors-only optimum** (a fresh plan built directly on the
+   surviving devices).
+2. **transient** — a scripted burst of transient stage faults on the
+   widened stage (spaced so retried calls land on unscripted invocation
+   counts); bounded per-group retries absorb the burst with no
+   quarantine.  Acceptance: 0 dropped, 0 out-of-order, throughput >=
+   0.8x the fault-free run of the same chain.
+3. **harris_transient** — the real jitted Harris pipeline, replicated,
+   with transient faults mid-stream: results must be IDENTICAL to a
+   fault-free run (retries re-execute the stage body, injection fires
+   before it, so no half-donated buffers).  Correctness only — wall
+   clock on the jitted path is CI noise.
+
+Feeds the ``faults`` section of ``BENCH_pipeline.json``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.simchain import make_planner, tps as _tps
+
+LOSS_STAGE_MS = [2.0, 8.0]            # dominant 2nd stage gets the widening
+BURST_STAGE_MS = [1.0, 4.0, 1.0]
+RECOVERY_FLOOR = 0.8                  # acceptance: tps_after/tps_survivor
+
+
+def _serve_phase(srv, toks) -> tuple[float, int, int]:
+    """Push one request wave through the server; (wall_s, served, dropped)."""
+    t0 = time.perf_counter()
+    reqs = [srv.submit(t) for t in toks]
+    served = dropped = 0
+    for r in reqs:
+        try:
+            r.wait(timeout=120.0)
+            served += 1
+        except Exception:
+            dropped += 1
+    return time.perf_counter() - t0, served, dropped
+
+
+def device_loss(n_per_phase: int = 24, smoke: bool = False) -> dict:
+    """Mid-run device loss: quarantine -> refresh -> re-plan -> hot-swap."""
+    from repro.core import DeviceInventory, StageProfiler
+    from repro.launch.serve import RequestQueueServer
+    from repro.runtime.faults import FaultInjector
+
+    if smoke:
+        n_per_phase = 12
+    n_stages = len(LOSS_STAGE_MS)
+    inv = DeviceInventory.host(4)
+    inj = FaultInjector()             # scripted live, mid-run
+    planner = make_planner("faults-loss", LOSS_STAGE_MS, inventory=inv,
+                           fault_injector=inj, quarantine_after=1)
+    prof = StageProfiler(n_stages, min_samples=2)
+    ex, _ = planner.executor_for(n_stages, jit=False, profiler=prof)
+    replicas_before = list(ex.replicas)
+    wide_si = max(range(n_stages), key=lambda s: ex.replicas[s])
+    target = ex.devices[wide_si][0]
+    toks = [np.full((8,), float(i)) for i in range(n_per_phase)]
+
+    served = dropped = 0
+    with RequestQueueServer(ex, max_batch=4, max_wait_ms=1.0) as srv:
+        # phase 1: healthy serving (also fills the profile)
+        dt, s, d = _serve_phase(srv, toks)
+        tps_before = n_per_phase / max(dt, 1e-9)
+        served += s
+        dropped += d
+        # phase 2: pull a device serving the wide stage; the replica
+        # pinned there is quarantined, siblings absorb its seqs
+        inj.lose_device(target)
+        _dt, s, d = _serve_phase(srv, toks)
+        served += s
+        dropped += d
+        stats = ex.stats()
+        # phase 3: elastic recovery — diff the surviving inventory,
+        # re-widen onto it, hot-swap with zero drops
+        diff = inv.refresh(probe=lambda: inj.surviving(inv))
+        decision = planner.replan_on_inventory_change(
+            diff, profiler=prof, stats=stats, jit=False)
+        old = srv.swap_executor(decision.executor,
+                                warm_args=(toks[0],))
+        dt, s, d = _serve_phase(srv, toks)
+        tps_after = n_per_phase / max(dt, 1e-9)
+        served += s
+        dropped += d
+    ooo = (old.stats().out_of_order_retired
+           + decision.executor.stats().out_of_order_retired)
+    old.close()
+    decision.executor.close()
+
+    # survivors-only optimum: a fresh plan built directly on the
+    # remaining devices — the bar the recovered pipeline must clear
+    sur_planner = make_planner("faults-loss-sur", LOSS_STAGE_MS,
+                               inventory=inv.drop([target]))
+    sur_ex, _ = sur_planner.executor_for(n_stages, jit=False)
+    with RequestQueueServer(sur_ex, max_batch=4, max_wait_ms=1.0) as ssrv:
+        dt, _s, _d = _serve_phase(ssrv, toks)
+    tps_survivor = n_per_phase / max(dt, 1e-9)
+    sur_ex.close()
+
+    recovery = tps_after / max(tps_survivor, 1e-9)
+    out = {
+        "stage_ms": list(LOSS_STAGE_MS), "requests": 3 * n_per_phase,
+        "served": served, "dropped": dropped, "out_of_order": int(ooo),
+        "retries": int(stats.retries), "quarantined": int(stats.quarantined),
+        "lost_device": int(target),
+        "replicas_before": replicas_before,
+        "replicas_after": list(decision.replicas or []),
+        "tps_before": round(tps_before, 2),
+        "tps_after": round(tps_after, 2),
+        "tps_survivor": round(tps_survivor, 2),
+        "recovery": round(recovery, 3),
+        "swaps": srv.swaps, "replanned": bool(decision.replanned),
+    }
+    assert out["dropped"] == 0, f"device loss dropped {out['dropped']} requests"
+    assert out["out_of_order"] == 0, "out-of-order retirement under loss"
+    assert out["quarantined"] >= 1, "device loss never quarantined a replica"
+    assert out["replanned"], "inventory change did not trigger a re-plan"
+    assert recovery >= RECOVERY_FLOOR, \
+        f"post-recovery throughput {recovery:.2f}x survivors-only optimum " \
+        f"(floor {RECOVERY_FLOOR}x)"
+    return out
+
+
+def transient(n_tokens: int = 32, smoke: bool = False) -> dict:
+    """Transient-error burst on the widened stage: retries, no quarantine."""
+    from repro.runtime.faults import FaultPlan
+
+    if smoke:
+        n_tokens = 16
+    n_stages = len(BURST_STAGE_MS)
+    toks = [np.full((8,), float(i)) for i in range(n_tokens)]
+
+    clean_planner = make_planner("faults-clean", BURST_STAGE_MS)
+    clean_ex, _ = clean_planner.executor_for(n_stages, worker_budget=6,
+                                             jit=False)
+    wide_si = max(range(n_stages), key=lambda s: clean_ex.replicas[s])
+    tps_clean = _tps(clean_ex, toks)
+    expect = clean_ex.run(toks)
+    clean_ex.close()
+
+    # burst on the wide stage, SPACED every 3rd call: a retried call is a
+    # new invocation count, so each faulted group recovers on its first
+    # retry instead of walking the rest of the scripted burst
+    burst = list(range(4, min(n_tokens, 20), 3))
+    plan = FaultPlan().transient(wide_si, at_calls=burst)
+    planner = make_planner("faults-burst", BURST_STAGE_MS,
+                           fault_injector=plan.build(),
+                           quarantine_after=len(burst) + 1)
+    ex, _ = planner.executor_for(n_stages, worker_budget=6, jit=False)
+    t0 = time.perf_counter()
+    handles = ex.submit_many([(t,) for t in toks])
+    served = dropped = 0
+    results = []
+    for h in handles:
+        try:
+            results.append(h.result())
+            served += 1
+        except Exception:
+            results.append(None)
+            dropped += 1
+    tps_faulty = n_tokens / max(time.perf_counter() - t0, 1e-9)
+    stats = ex.stats()
+    ex.close()
+
+    match = served == n_tokens and all(
+        np.allclose(r, e) for r, e in zip(results, expect))
+    recovery = tps_faulty / max(tps_clean, 1e-9)
+    out = {
+        "stage_ms": list(BURST_STAGE_MS), "requests": n_tokens,
+        "served": served, "dropped": dropped,
+        "out_of_order": int(stats.out_of_order_retired),
+        "retries": int(stats.retries), "quarantined": int(stats.quarantined),
+        "errors_injected": len(burst),
+        "tps_clean": round(tps_clean, 2),
+        "tps_faulty": round(tps_faulty, 2),
+        "recovery": round(recovery, 3),
+        "results_match": bool(match),
+    }
+    assert out["dropped"] == 0, f"burst dropped {out['dropped']} requests"
+    assert out["out_of_order"] == 0, "out-of-order retirement under burst"
+    assert out["retries"] >= len(burst), "burst faults were not retried"
+    assert out["results_match"], "retried results diverge from fault-free run"
+    assert recovery >= RECOVERY_FLOOR, \
+        f"throughput under burst {recovery:.2f}x fault-free " \
+        f"(floor {RECOVERY_FLOOR}x)"
+    return out
+
+
+def harris_transient(n_requests: int = 16, size: tuple[int, int] = (64, 96),
+                     smoke: bool = False) -> dict:
+    """Transient faults on the replicated jitted Harris pipeline:
+    results must be bit-identical to the fault-free run."""
+    import jax
+
+    from repro.core import assign_replicas, courier_offload
+    from repro.core.tracer import Library
+    from repro.models.harris import corner_harris_demo, make_harris_db
+    from repro.runtime.faults import FaultPlan
+
+    if smoke:
+        n_requests = 8
+    db = make_harris_db(with_hw=False)
+    lib = Library(db)
+    app = corner_harris_demo(lib)
+    H, W = size
+    frames = [jax.random.uniform(jax.random.PRNGKey(i), (H, W, 3)) * 255
+              for i in range(n_requests)]
+    off = courier_offload(app, frames[0], db=db, prefer_hw=False)
+    pipe = off.pipeline
+    plan = assign_replicas(pipe.plan, pipe.ir, worker_budget=8)
+    wide_si = max(range(plan.n_stages), key=lambda s: plan.replicas[s])
+
+    ex_clean = pipe.executor(replicas=plan.replicas)
+    ex_clean.warmup(frames[0])
+    expect = ex_clean.run(frames)
+    ex_clean.close()
+
+    burst = [2, 5] if n_requests >= 8 else [2]
+    inj = FaultPlan().build()            # empty: warmup must run fault-free
+    ex = pipe.executor(replicas=plan.replicas, fault_injector=inj,
+                       quarantine_after=len(burst) + 1)
+    ex.warmup(frames[0])
+    # injector counters include the warmup calls; script relative to them
+    # so the faults land mid-stream
+    base = inj.stage_calls(wide_si)
+    inj.plan.transient(wide_si, at_calls=[base + c for c in burst])
+    handles = ex.submit_many([(f,) for f in frames])
+    served = dropped = 0
+    results = []
+    for h in handles:
+        try:
+            results.append(h.result())
+            served += 1
+        except Exception:
+            results.append(None)
+            dropped += 1
+    stats = ex.stats()
+    ex.close()
+
+    match = served == n_requests and all(
+        np.allclose(np.asarray(r), np.asarray(e))
+        for r, e in zip(results, expect))
+    out = {
+        "requests": n_requests, "served": served, "dropped": dropped,
+        "out_of_order": int(stats.out_of_order_retired),
+        "retries": int(stats.retries),
+        "errors_injected": int(inj.injected),
+        "replicas": list(plan.replicas),
+        "results_match": bool(match),
+        "shape": [H, W],
+    }
+    assert out["dropped"] == 0, \
+        f"harris burst dropped {out['dropped']} requests"
+    assert out["results_match"], \
+        "harris results diverge from the fault-free run"
+    return out
+
+
+_payload_cache: dict = {}
+
+
+def payload(smoke: bool = False) -> dict:
+    key = bool(smoke)
+    if key not in _payload_cache:
+        _payload_cache[key] = {
+            "device_loss": device_loss(smoke=smoke),
+            "transient": transient(smoke=smoke),
+            "harris_transient": harris_transient(smoke=smoke),
+        }
+    return _payload_cache[key]
+
+
+def run(smoke: bool = False) -> list:
+    p = payload(smoke=smoke)
+    dl, tr, ht = p["device_loss"], p["transient"], p["harris_transient"]
+    return [
+        ("faults.device_loss.dropped", dl["dropped"],
+         f"{dl['served']}/{dl['requests']} served across loss of device "
+         f"{dl['lost_device']}; {dl['quarantined']} quarantined"),
+        ("faults.device_loss.recovery", dl["recovery"],
+         f"post-recovery {dl['tps_after']} tps vs survivors-only "
+         f"{dl['tps_survivor']} tps (floor {RECOVERY_FLOOR})"),
+        ("faults.device_loss.replicas", str(dl["replicas_after"]).replace(
+            ",", ";"),
+         f"re-widened from {dl['replicas_before']} after the loss"),
+        ("faults.transient.dropped", tr["dropped"],
+         f"{tr['served']}/{tr['requests']} served under "
+         f"{tr['errors_injected']} injected faults; {tr['retries']} retries"),
+        ("faults.transient.recovery", tr["recovery"],
+         f"{tr['tps_faulty']} tps under burst vs {tr['tps_clean']} tps clean"),
+        ("faults.harris.results_match", int(ht["results_match"]),
+         f"{ht['served']}/{ht['requests']} served; {ht['retries']} retries "
+         f"on the replicated jitted pipeline"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run(smoke="--smoke" in sys.argv[1:]):
+        print(",".join(str(x) for x in r))

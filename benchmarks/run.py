@@ -33,9 +33,10 @@ def _emit(mod) -> None:
 
 
 def main() -> None:
-    from benchmarks import (analysis, devices, fig4_callgraph, fusion,
-                            replan, replicate, roofline, table1_pipeline,
-                            table2_modules, table3_resources)
+    from benchmarks import (analysis, devices, faults, fig4_callgraph,
+                            fusion, replan, replicate, roofline,
+                            table1_pipeline, table2_modules,
+                            table3_resources)
 
     smoke = "--smoke" in sys.argv[1:]
     print("name,value,derived")
@@ -74,6 +75,17 @@ def main() -> None:
             print(f"smoke.devices.pinned,{dev['sim']['distinct_devices']},"
                   f"{dev['pinning']['distinct']} distinct committed devices; "
                   f"{dev['hot_swap']['dropped']} dropped across swap")
+            flt = faults.payload(smoke=True)   # asserts 0 dropped, >= 0.8x
+            print(f"smoke.faults.device_loss,{flt['device_loss']['dropped']},"
+                  f"{flt['device_loss']['served']} served; "
+                  f"{flt['device_loss']['quarantined']} quarantined; "
+                  f"{flt['device_loss']['out_of_order']} out-of-order")
+            print(f"smoke.faults.recovery,{flt['device_loss']['recovery']},"
+                  f"post-loss {flt['device_loss']['tps_after']} tps vs "
+                  f"survivors-only {flt['device_loss']['tps_survivor']} tps")
+            print(f"smoke.faults.transient,{flt['transient']['dropped']},"
+                  f"{flt['transient']['retries']} retries absorbed "
+                  f"{flt['transient']['errors_injected']} injected faults")
             ver = analysis.payload(smoke=True)["verify"]   # asserts < 5%
             print(f"smoke.verify.overhead,{ver['ratio']},"
                   f"verify {ver['verify_ms']} ms vs build {ver['build_ms']} "
@@ -86,12 +98,12 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
             sys.exit(1)
         return
-    # replan/replicate/devices last: their thread pools, serving loops, and
-    # subprocesses are the noisiest neighbors for the wall-clock benchmarks
-    # that precede them
+    # replan/replicate/devices/faults last: their thread pools, serving
+    # loops, and subprocesses are the noisiest neighbors for the wall-clock
+    # benchmarks that precede them
     for mod in (table1_pipeline, table2_modules, table3_resources,
                 fig4_callgraph, fusion, roofline, analysis, replan,
-                replicate, devices):
+                replicate, devices, faults):
         _emit(mod)
     try:
         path = table1_pipeline.write_bench_json()

@@ -27,9 +27,12 @@ def make_impl(key: str):
     return sw
 
 
-def make_planner(name: str, times_ms, io_shape=(8,)):
+def make_planner(name: str, times_ms, io_shape=(8,), inventory=None,
+                 **planner_kwargs):
     """ElasticPlanner over a sleep-backed chain; one node per entry of
-    ``times_ms``, keys ``f0..fN-1``, knobs initialized to those times."""
+    ``times_ms``, keys ``f0..fN-1``, knobs initialized to those times.
+    ``inventory`` and extra keyword arguments (fault_injector,
+    quarantine_after, ...) are forwarded to the planner."""
     from repro.core import ModuleDatabase, linear_ir
     from repro.runtime import ElasticPlanner
 
@@ -41,7 +44,7 @@ def make_planner(name: str, times_ms, io_shape=(8,)):
         db.register(k, software=make_impl(k))
     ir = linear_ir(name, keys, [float(t) for t in times_ms],
                    io_shape=io_shape)
-    return ElasticPlanner(ir, db=db)
+    return ElasticPlanner(ir, db=db, inventory=inventory, **planner_kwargs)
 
 
 def tps(executor, tokens) -> float:

@@ -177,7 +177,7 @@ def bench_payload(smoke: bool = False) -> dict:
     """sequential / wavefront / async / fused tokens-per-sec + bottleneck ms,
     plus the fusion, adaptive-replan, and stage-replication benchmarks —
     the perf trajectory tracked across PRs."""
-    from benchmarks import devices, fusion, replan, replicate
+    from benchmarks import devices, faults, fusion, replan, replicate
 
     n_frames = 2 if smoke else 12
     size = (64, 96) if smoke else (270, 480)
@@ -190,6 +190,7 @@ def bench_payload(smoke: bool = False) -> dict:
     rep = replan.payload(smoke=smoke)
     wide = replicate.payload(smoke=smoke)
     dev = devices.payload(smoke=smoke)
+    flt = faults.payload(smoke=smoke)    # last: fault churn + serving loops
     return {
         "bench": "table1_pipeline", "smoke": bool(smoke),
         "shape": m["shape"], "n_frames": m["n_frames"],
@@ -212,6 +213,7 @@ def bench_payload(smoke: bool = False) -> dict:
         "replan": rep,
         "replicate": wide,
         "devices": dev,
+        "faults": flt,
     }
 
 

@@ -378,6 +378,50 @@ def _rule_acquire_without_finally(ctx: LintContext) -> Iterable[Diagnostic]:
 
 
 # --------------------------------------------------------------------------- #
+# swallowed-exception — broad handlers must re-raise or record the error
+# --------------------------------------------------------------------------- #
+@file_rule("swallowed-exception")
+def _rule_swallowed_exception(ctx: LintContext) -> Iterable[Diagnostic]:
+    """``except Exception`` / bare ``except`` that neither re-raises nor
+    *uses* the caught error silently converts a failure into wrong state —
+    the fault-tolerance layer depends on every error landing somewhere (a
+    group, a stats counter, a log).  A handler passes when its body
+    contains a ``raise``, or when it binds the exception (``as e``) and
+    references the name.  Deliberate best-effort probes annotate the
+    ``except`` line with ``# lint: allow-swallow(reason)``."""
+    broad = ("Exception", "BaseException")
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        t = node.type
+        if t is not None and not (isinstance(t, ast.Name)
+                                  and t.id in broad):
+            continue
+        if "# lint: allow-swallow" in ctx.line(node.lineno):
+            continue
+        names = set()
+        raises = False
+        for sub in node.body:
+            for n in ast.walk(sub):
+                if isinstance(n, ast.Raise):
+                    raises = True
+                elif isinstance(n, ast.Name):
+                    names.add(n.id)
+        if raises or (node.name is not None and node.name in names):
+            continue
+        what = "bare except" if t is None \
+            else f"except {t.id}"      # type: ignore[union-attr]
+        out.append(Diagnostic(
+            rule="swallowed-exception", path=ctx.path, line=node.lineno,
+            message=f"{what}: handler neither re-raises nor records the "
+                    "error",
+            hint="re-raise, bind 'as e' and record it on a group/stats "
+                 "object, or annotate '# lint: allow-swallow(reason)'"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
 # dead-export — public module-level defs nobody imports
 # --------------------------------------------------------------------------- #
 @project_rule("dead-export")

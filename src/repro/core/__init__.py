@@ -30,9 +30,9 @@ from .partition import (PipelinePlan, StagePlan, assign_replicas,
                         widen_for_deployment)
 from .pipeline import (BuiltPipeline, PipelineGenerator, StageFn,
                        assign_placements, make_stage_fns)
-from .placement import (AUTO_BUDGET, DeviceInventory, DeviceSpec, Placement,
-                        default_worker_budget, is_hw, is_sw, placement_kind,
-                        resolve_worker_budget)
+from .placement import (AUTO_BUDGET, DeviceInventory, DeviceSpec,
+                        InventoryDiff, Placement, default_worker_budget,
+                        is_hw, is_sw, placement_kind, resolve_worker_budget)
 from .profiler import StageProfiler
 from .spmd_pipeline import (pipeline_microbatches, spmd_pipeline_fn,
                             stack_stage_params, stage_apply)
@@ -56,9 +56,9 @@ __all__ = [
     "split_fused_node", "widen_for_deployment",
     "BuiltPipeline", "PipelineGenerator", "StageFn", "assign_placements",
     "make_stage_fns",
-    "AUTO_BUDGET", "DeviceInventory", "DeviceSpec", "Placement",
-    "default_worker_budget", "is_hw", "is_sw", "placement_kind",
-    "resolve_worker_budget",
+    "AUTO_BUDGET", "DeviceInventory", "DeviceSpec", "InventoryDiff",
+    "Placement", "default_worker_budget", "is_hw", "is_sw",
+    "placement_kind", "resolve_worker_budget",
     "StageProfiler",
     "pipeline_microbatches", "spmd_pipeline_fn", "stack_stage_params",
     "stage_apply",

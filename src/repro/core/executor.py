@@ -56,6 +56,27 @@ pool:
   tokens retire in submission order even when replicas finish out of
   order; ``ExecutorStats.out_of_order_retired`` asserts it stayed zero.
 
+* **Replica quarantine + bounded retry** — a stage exception on a
+  *replicated* stage no longer errors the group.  The failing worker
+  retries the group (locally for transients, on a sibling after
+  quarantine), bounded by ``max_group_retries`` per group and
+  ``retry_budget_ms`` since admission.  A replica whose error count
+  reaches ``quarantine_after`` is **quarantined**: its ring is drained,
+  its seq-residue ownership is redistributed to healthy siblings (the
+  per-stage owner map, rewritten under the stage's route lock so no
+  hand-off is lost), and its worker thread exits — in-order retirement is
+  preserved throughout because the reorder buffer never changed.  The
+  LAST healthy replica of a stage is never quarantined, and unreplicated
+  stages keep the error-the-group behavior, so failures are never
+  silently swallowed.  ``ExecutorStats.retries``/``quarantined`` count
+  the recoveries.  Scripted faults come from a
+  :class:`~repro.runtime.faults.FaultInjector` hooked in front of every
+  stage body (``fault_injector=``); injection happens BEFORE the stage
+  function runs, so a retried injected fault never re-executes a
+  half-donated buffer (a real mid-execution failure that already donated
+  its buffers will surface on the retry and error the group — degraded,
+  not wrong).
+
 Completion is in-order (tokens retire oldest-first), matching the paper's
 ``serial_in_order`` first/last filters.
 """
@@ -110,6 +131,7 @@ class StageCounters:
 
     issued: int = 0        # stage invocations (one per token group)
     tokens: int = 0        # tokens pushed through this stage
+    errors: int = 0        # stage-call failures (pre-retry; see retries)
     issue_ms: float = 0.0  # host time spent dispatching this stage
     # measured stage-body wall time (threaded/sampled only); disjoint from
     # xfer_ms — exec_ms + xfer_ms is the stage's full service time
@@ -124,6 +146,7 @@ class StageCounters:
 
     def as_dict(self) -> dict:
         return {"issued": self.issued, "tokens": self.tokens,
+                "errors": self.errors,
                 "issue_ms": round(self.issue_ms, 4),
                 "exec_ms": round(self.exec_ms, 4),
                 "xfer_ms": round(self.xfer_ms, 4),
@@ -144,6 +167,12 @@ class ExecutorStats:
     occupancy_sum: int = 0
     wall_ms: float = 0.0           # accumulated blocking run() wall time
     out_of_order_retired: int = 0  # groups retired out of submission order
+    retries: int = 0               # failed stage calls re-executed
+    quarantined: int = 0           # replicas evicted after repeated errors
+    # failed stage calls per CONFIGURED device ordinal — the replanner's
+    # unhealthy-device signal (populated only for device-placed replicas)
+    device_errors: dict = field(default_factory=dict)
+    quarantined_replicas: list = field(default_factory=list)  # (stage, w)
 
     @property
     def mean_occupancy(self) -> float:
@@ -165,6 +194,12 @@ class ExecutorStats:
             "groups_admitted": self.groups_admitted,
             "max_in_flight_seen": self.max_in_flight_seen,
             "out_of_order_retired": self.out_of_order_retired,
+            "retries": self.retries,
+            "quarantined": self.quarantined,
+            "device_errors": {str(k): v
+                              for k, v in sorted(self.device_errors.items())},
+            "quarantined_replicas": [list(t)
+                                     for t in self.quarantined_replicas],
             "mean_occupancy": round(self.mean_occupancy, 3),
             "wall_ms": round(self.wall_ms, 3),
             "throughput_tps": round(self.throughput_tps, 2),
@@ -210,7 +245,7 @@ class _Group:
     """One admitted token group: a (possibly stacked) env fully issued."""
 
     __slots__ = ("env", "size", "stacked", "results", "done", "error", "lock",
-                 "future", "seq", "fns", "evt")
+                 "future", "seq", "fns", "evt", "retries", "t_admit")
 
     def __init__(self, env: dict | None, size: int, stacked: bool):
         self.env = env                # None until all stages are issued
@@ -224,64 +259,81 @@ class _Group:
         self.seq: int | None = None   # admission sequence (replicated mode)
         self.fns: tuple | None = None  # resolved stage fns (replicated mode)
         self.evt: threading.Event | None = None  # completion (replicated mode)
+        self.retries = 0              # failed stage calls re-executed
+        self.t_admit = time.perf_counter()  # retry_budget_ms anchor
 
 
 class _SeqRing:
-    """Sequence-indexed slot ring feeding ONE replica of ONE stage.
+    """Sequence-indexed mailbox feeding ONE replica of ONE stage.
 
-    Replica ``w`` of a stage replicated ``r``-wide owns group sequence
-    numbers ``w, w+r, w+2r, ...`` and consumes them strictly in that
-    order; the slot for seq ``n`` is ``(n // r) % cap``.  Every seq has
-    exactly one producer (the upstream worker that completed it), so each
-    slot is written by one thread and read by one thread — an SPSC
-    hand-off guarded only for the ready-flag flip.  Slots are
-    preallocated; the token envs ride on the group object, so the steady
-    path moves one reference, never rebuilds a dict.
+    A ring owns a set of seq RESIDUES (mod the stage width ``r``) and
+    consumes each residue's seqs strictly in order.  At construction
+    replica ``w`` owns exactly residue ``w`` — group sequence numbers
+    ``w, w+r, w+2r, ...`` — and every seq has exactly one producer (the
+    upstream worker that completed it), so the hand-off is an SPSC dict
+    insert + flag flip; the token envs ride on the group object, so the
+    steady path moves one reference, never rebuilds a dict.  The mailbox
+    is unbounded but in practice holds at most the token pool (admission
+    bounds the in-flight seq span).
+
+    Quarantine is why residues are a *set*: when a sibling replica is
+    evicted, this ring :meth:`adopt`\\ s the failed replica's residues
+    (with their next-expected seqs) and its undelivered groups are
+    re-:meth:`put` here, so the adopted residues resume exactly where the
+    failed worker stopped — no seq is skipped, none runs twice.
     """
 
-    __slots__ = ("cap", "stride", "slots", "cond", "next_seq", "closed")
+    __slots__ = ("stride", "slots", "cond", "next", "closed")
 
-    def __init__(self, cap: int, stride: int, first_seq: int):
-        self.cap = cap
+    def __init__(self, stride: int, first_seq: int):
         self.stride = stride
-        self.next_seq = first_seq          # next owned seq to consume
-        self.slots: list = [None] * cap    # (seq, group) | None = free
+        # residue -> next owned seq to consume (starts owning one residue)
+        self.next: dict[int, int] = {first_seq % max(stride, 1): first_seq}
+        self.slots: dict[int, "_Group"] = {}
         self.cond = threading.Condition(threading.Lock())
         self.closed = False
-
-    def _idx(self, seq: int) -> int:
-        return (seq // self.stride) % self.cap
 
     def put(self, seq: int, group: "_Group") -> bool:
         """False when the ring is closed (the group was NOT enqueued) —
         callers must fail the group rather than wait on an event no
         worker will ever set."""
-        i = self._idx(seq)
         with self.cond:
-            # capacity guard: unreachable while cap > token pool (the pool
-            # bounds in-flight seq span), kept for safety
-            while self.slots[i] is not None and not self.closed:
-                self.cond.wait()
             if self.closed:
                 return False
-            self.slots[i] = (seq, group)
+            self.slots[seq] = group
             self.cond.notify_all()
             return True
 
     def pop(self) -> "tuple[int, _Group] | None":
-        """Block for this replica's next owned seq; ``None`` once closed."""
+        """Block for the next owned seq of any owned residue; ``None``
+        once closed."""
         with self.cond:
             while True:
-                i = self._idx(self.next_seq)
-                item = self.slots[i]
-                if item is not None and item[0] == self.next_seq:
-                    self.slots[i] = None
-                    self.next_seq += self.stride
-                    self.cond.notify_all()
-                    return item
+                for res, nxt in self.next.items():
+                    g = self.slots.pop(nxt, None)
+                    if g is not None:
+                        self.next[res] = nxt + self.stride
+                        return nxt, g
                 if self.closed:
                     return None
                 self.cond.wait()
+
+    def adopt(self, residue: int, next_seq: int) -> None:
+        """Take ownership of a quarantined sibling's residue, resuming at
+        ``next_seq`` (the sibling's consumption watermark)."""
+        with self.cond:
+            self.next[residue] = next_seq
+            self.cond.notify_all()
+
+    def retire(self) -> "tuple[dict[int, _Group], dict[int, int]]":
+        """Close the ring and hand back its undelivered groups and
+        residue watermarks — the quarantine path re-routes both."""
+        with self.cond:
+            self.closed = True
+            slots, nxt = dict(self.slots), dict(self.next)
+            self.slots.clear()
+            self.cond.notify_all()
+            return slots, nxt
 
     def close(self) -> None:
         with self.cond:
@@ -386,6 +438,24 @@ class PipelineExecutor:
         The :class:`~repro.core.placement.DeviceInventory` that maps
         ordinals to ``jax.Device`` objects; defaults to
         ``DeviceInventory.detect()`` when ``devices`` is given.
+    fault_injector:
+        Optional :class:`~repro.runtime.faults.FaultInjector` called in
+        front of every stage body (all execution modes).  Injected faults
+        take the same recovery path as real stage exceptions.
+    max_group_retries:
+        Retry budget per group across all stages (replicated mode only):
+        a group whose stage calls failed this many times errors instead
+        of retrying again.
+    quarantine_after:
+        Errors a single replica may absorb before it is quarantined and
+        its seq ownership moves to healthy siblings (default 1: the first
+        failure evicts).  The last healthy replica of a stage is never
+        quarantined.
+    retry_budget_ms:
+        Deadline bound on retries: once a group has been in flight this
+        long, a failing stage call errors the group instead of retrying —
+        late work is degraded, not re-queued forever.  ``None`` (default)
+        leaves retries bounded only by ``max_group_retries``.
     """
 
     def __init__(self, stage_fns: Sequence[Callable],
@@ -397,7 +467,9 @@ class PipelineExecutor:
                  profiler: Any = None, stage_workers: bool = False,
                  replicas: Sequence[int] | None = None,
                  devices: Sequence[Sequence[int]] | None = None,
-                 inventory: Any = None):
+                 inventory: Any = None, fault_injector: Any = None,
+                 max_group_retries: int = 3, quarantine_after: int = 1,
+                 retry_budget_ms: float | None = None):
         if max_in_flight is not None and max_in_flight < 1:
             raise ValueError(
                 f"max_in_flight must be >= 1 (got {max_in_flight}); "
@@ -471,6 +543,17 @@ class PipelineExecutor:
                 ThreadPoolExecutor(max_workers=1,
                                    thread_name_prefix=f"stage-{i}")
                 for i in range(len(self.stage_fns))]
+        if max_group_retries < 0:
+            raise ValueError(
+                f"max_group_retries must be >= 0 (got {max_group_retries})")
+        if quarantine_after < 1:
+            raise ValueError(
+                f"quarantine_after must be >= 1 (got {quarantine_after})")
+        self._injector = fault_injector
+        self.max_group_retries = int(max_group_retries)
+        self.quarantine_after = int(quarantine_after)
+        self.retry_budget_ms = (None if retry_budget_ms is None
+                                else float(retry_budget_ms))
         self._inflight: deque[_Group] = deque()
         self._occupancy = 0               # live (non-retired) tokens
         self._lock = threading.RLock()
@@ -479,10 +562,19 @@ class PipelineExecutor:
         self._next_retire_seq = 0         # in-order retirement watermark
         self._rings: list[list[_SeqRing]] | None = None
         self._replica_threads: list[threading.Thread] = []
+        self._owner: list[list[int]] | None = None
+        self._route_locks: list[threading.Lock] | None = None
+        self._healthy: list[list[bool]] | None = None
+        self._err_counts: list[list[int]] | None = None
         if self.replicas is not None:
-            cap = self.pool + 2           # > max in-flight seq span
-            self._rings = [[_SeqRing(cap, r, w) for w in range(r)]
+            self._rings = [[_SeqRing(r, w) for w in range(r)]
                            for r in self.replicas]
+            # residue -> serving replica; rewritten by _quarantine under
+            # the per-stage route lock (serializes against _route)
+            self._owner = [list(range(r)) for r in self.replicas]
+            self._route_locks = [threading.Lock() for _ in self.replicas]
+            self._healthy = [[True] * r for r in self.replicas]
+            self._err_counts = [[0] * r for r in self.replicas]
             for si, r in enumerate(self.replicas):
                 for w in range(r):
                     t = threading.Thread(
@@ -507,7 +599,10 @@ class PipelineExecutor:
                       profiler: Any = None, stage_workers: bool = False,
                       replicas: Sequence[int] | None = None,
                       devices: Sequence[Sequence[int]] | None = None,
-                      inventory: Any = None) -> "PipelineExecutor":
+                      inventory: Any = None, fault_injector: Any = None,
+                      max_group_retries: int = 3, quarantine_after: int = 1,
+                      retry_budget_ms: float | None = None,
+                      ) -> "PipelineExecutor":
         """Build from a :class:`repro.core.pipeline.BuiltPipeline`.
 
         The vmapped stage executables are hoisted onto (and shared via) the
@@ -521,7 +616,11 @@ class PipelineExecutor:
                    pad_microbatches=pad_microbatches, buckets=buckets,
                    batched_fns=batched, profiler=profiler,
                    stage_workers=stage_workers, replicas=replicas,
-                   devices=devices, inventory=inventory)
+                   devices=devices, inventory=inventory,
+                   fault_injector=fault_injector,
+                   max_group_retries=max_group_retries,
+                   quarantine_after=quarantine_after,
+                   retry_budget_ms=retry_budget_ms)
 
     # -- public API ---------------------------------------------------------- #
     def submit(self, *args: Any) -> PendingToken:
@@ -805,6 +904,10 @@ class PipelineExecutor:
                 # barrier per stage so the profiler sees real wall times
                 sample = self.profiler is not None and self.profiler.tick()
                 for si, fn in enumerate(fns):
+                    if self._injector is not None:
+                        # unreplicated path: injected faults error the
+                        # group at issue time (no replica to retry on)
+                        self._injector.on_stage_call(si)
                     t0 = time.perf_counter()
                     env = fn(env)   # returns immediately (async dispatch)
                     # issue_ms stays a pure dispatch metric: capture it
@@ -850,15 +953,21 @@ class PipelineExecutor:
 
     # -- replicated-stage dataflow (sequence-numbered rings) ----------------- #
     def _route(self, si: int, seq: int, g: _Group) -> None:
-        """Hand a group to stage ``si``'s owning replica ring (seq mod r).
+        """Hand a group to stage ``si``'s owning replica ring.
 
+        Ownership is looked up through ``self._owner`` (residue ``seq mod
+        r`` -> replica index) under the stage's route lock, so a
+        concurrent quarantine either sees this put in the old ring (and
+        re-routes it during its drain) or this put sees the new owner.
         A refused hand-off (ring already closed — only reachable if a
         caller bypasses the admission-side closed check) poisons the group
         and signals its completion event, so finalizers raise instead of
         waiting forever on a worker that already exited.
         """
         r = self.replicas[si]
-        if not self._rings[si][seq % r].put(seq, g):
+        with self._route_locks[si]:
+            ok = self._rings[si][self._owner[si][seq % r]].put(seq, g)
+        if not ok:
             if g.error is None:
                 g.error = ExecutorClosed(
                     f"stage {si} ring closed before seq {seq} arrived")
@@ -884,43 +993,155 @@ class PipelineExecutor:
         # staged, so samples carry no device ordinal
         ordinal = (self.devices[si][w]
                    if self._replica_devs is not None else None)
+        # fault injection keys on the CONFIGURED placement even in degraded
+        # mode: a planning-only inventory still scripts "lose ordinal 2",
+        # and the replica the plan pinned there must observe the loss
+        inj_ord = (self.devices[si][w]
+                   if self.devices is not None else None)
         while True:
             item = ring.pop()
             if item is None:
                 return
             seq, g = item
+            forward = True
             if g.error is None:
-                t0 = time.perf_counter()
-                try:
-                    if dev is not None:
-                        # commit the group onto this replica's device; the
-                        # jitted stage then compiles/executes there (one
-                        # executable per device, cached by jit) and its
-                        # outputs stay committed for the .devices() audit
-                        g.env = jax.device_put(g.env, dev)
-                        xfer = (time.perf_counter() - t0) * 1e3
-                    else:
-                        xfer = 0.0
-                    g.env = jax.block_until_ready(g.fns[si](g.env))
-                    ms = (time.perf_counter() - t0) * 1e3
-                    if self.profiler is not None:
-                        # the profiler measures SERVICE time — staging
-                        # included, matching the replicated_bottleneck_ms
-                        # contract that hand-off overhead lives in the
-                        # measured stage time
-                        self.profiler.record(si, ms, replica=w,
-                                             device=ordinal)
-                    with self._lock:
-                        # counters are DISJOINT: exec_ms is the stage body
-                        # alone, xfer_ms the staging hop (sum = service)
-                        self._stats.per_stage[si].exec_ms += ms - xfer
-                        self._stats.per_stage[si].xfer_ms += xfer
-                except BaseException as e:
-                    g.error = e
-            if last:
-                g.evt.set()
+                forward = self._exec_replicated(si, w, seq, g, dev,
+                                                ordinal, inj_ord)
+            if forward:
+                if last:
+                    g.evt.set()
+                else:
+                    self._route(si + 1, seq, g)
             else:
-                self._route(si + 1, seq, g)
+                return      # this replica quarantined itself; seq re-runs
+
+    def _exec_replicated(self, si: int, w: int, seq: int, g: _Group,
+                         dev: Any, ordinal: int | None,
+                         inj_ord: int | None) -> bool:
+        """Run stage ``si`` on group ``g`` with bounded retry.
+
+        Injection fires BEFORE the stage body, so a retried injected fault
+        never re-executes a half-donated buffer.  Returns True when the
+        group should be forwarded (success, or a non-retryable error
+        recorded on the group); False when this replica quarantined itself
+        — the group then re-runs on a sibling replica via the ownership
+        transfer in :meth:`_quarantine`.
+        """
+        while True:
+            t0 = time.perf_counter()
+            try:
+                if self._injector is not None:
+                    self._injector.on_stage_call(si, replica=w,
+                                                 device=inj_ord)
+                if dev is not None:
+                    # commit the group onto this replica's device; the
+                    # jitted stage then compiles/executes there (one
+                    # executable per device, cached by jit) and its
+                    # outputs stay committed for the .devices() audit
+                    g.env = jax.device_put(g.env, dev)
+                    xfer = (time.perf_counter() - t0) * 1e3
+                else:
+                    xfer = 0.0
+                g.env = jax.block_until_ready(g.fns[si](g.env))
+                ms = (time.perf_counter() - t0) * 1e3
+                if self.profiler is not None:
+                    # the profiler measures SERVICE time — staging
+                    # included, matching the replicated_bottleneck_ms
+                    # contract that hand-off overhead lives in the
+                    # measured stage time
+                    self.profiler.record(si, ms, replica=w,
+                                         device=ordinal)
+                with self._lock:
+                    # counters are DISJOINT: exec_ms is the stage body
+                    # alone, xfer_ms the staging hop (sum = service)
+                    self._stats.per_stage[si].exec_ms += ms - xfer
+                    self._stats.per_stage[si].xfer_ms += xfer
+                return True
+            except BaseException as e:
+                action = self._on_stage_error(si, w, g, e, inj_ord)
+                if action == "retry":
+                    continue
+                if action == "quarantine":
+                    self._quarantine(si, w, seq, g)
+                    return False
+                g.error = e
+                return True
+
+    def _on_stage_error(self, si: int, w: int, g: _Group, e: BaseException,
+                        inj_ord: int | None) -> str:
+        """Decide what a failed stage call on a replicated stage means.
+
+        ``"fail"`` — record the error on the group (unreplicated stage,
+        retry budget exhausted, or no healthy sibling would remain);
+        ``"retry"`` — re-run locally (transient, replica still healthy);
+        ``"quarantine"`` — evict this replica and re-run on a sibling.
+        """
+        now = time.perf_counter()
+        with self._lock:
+            self._stats.per_stage[si].errors += 1
+            if inj_ord is not None:
+                self._stats.device_errors[inj_ord] = \
+                    self._stats.device_errors.get(inj_ord, 0) + 1
+            self._err_counts[si][w] += 1
+            errs = self._err_counts[si][w]
+            healthy_others = sum(self._healthy[si]) \
+                - (1 if self._healthy[si][w] else 0)
+            budget_ok = self.retry_budget_ms is None \
+                or (now - g.t_admit) * 1e3 < self.retry_budget_ms
+            can_retry = (self.replicas[si] > 1
+                         and g.retries < self.max_group_retries
+                         and budget_ok)
+            if can_retry:
+                g.retries += 1
+                self._stats.retries += 1
+        if self.profiler is not None:
+            # profiler has its own lock — record outside self._lock
+            self.profiler.record_error(si, replica=w, device=inj_ord)
+        if not can_retry:
+            return "fail"
+        if errs >= self.quarantine_after and healthy_others >= 1:
+            return "quarantine"
+        return "retry"
+
+    def _quarantine(self, si: int, w: int, seq: int, g: _Group) -> None:
+        """Evict replica ``w`` of stage ``si`` and redistribute its work.
+
+        The failing replica drains its own ring (``retire``), rolls the
+        failed seq's residue watermark back so the group re-runs, then
+        hands every owned residue — and every parked group — to the
+        surviving healthy replicas round-robin.  The stage's route lock
+        serializes this against concurrent :meth:`_route` puts: a put
+        either landed in the old ring before ``retire`` (captured and
+        re-put below) or resolves the new owner afterwards.  Callers
+        guarantee at least one healthy sibling remains
+        (:meth:`_on_stage_error` checks ``healthy_others >= 1``).
+        """
+        r = self.replicas[si]
+        with self._route_locks[si]:
+            with self._lock:
+                self._healthy[si][w] = False
+                self._stats.quarantined += 1
+                self._stats.quarantined_replicas.append((si, w))
+                targets = [i for i in range(r) if self._healthy[si][i]]
+            slots, nxt = self._rings[si][w].retire()
+            # roll back the failed seq's watermark: the group whose call
+            # failed must re-run on its new owner
+            nxt[seq % r] = seq
+            slots[seq] = g
+            for j, res in enumerate(sorted(nxt)):
+                t = targets[j % len(targets)]
+                self._owner[si][res] = t
+                self._rings[si][t].adopt(res, nxt[res])
+            for s in sorted(slots):
+                self._rings[si][self._owner[si][s % r]].put(s, slots[s])
+
+    def healthy_replicas(self) -> list[int] | None:
+        """Healthy worker count per stage (None for a non-replicated
+        executor) — the serving layer's view of quarantine attrition."""
+        if self._healthy is None:
+            return None
+        with self._lock:
+            return [sum(h) for h in self._healthy]
 
     def _issue_threaded(self, g: _Group, env: dict,
                         fns: Sequence[Callable]) -> None:
@@ -939,6 +1160,10 @@ class PipelineExecutor:
     def _run_stage(self, fn: Callable, si: int, env0: dict | None,
                    prev: Future | None) -> dict:
         env = env0 if prev is None else prev.result()
+        if self._injector is not None:
+            # non-replicated stage: an injected fault errors the group
+            # (no sibling to retry on), same as a real stage exception
+            self._injector.on_stage_call(si)
         t0 = time.perf_counter()
         out = jax.block_until_ready(fn(env))
         ms = (time.perf_counter() - t0) * 1e3

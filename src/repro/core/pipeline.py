@@ -366,7 +366,10 @@ class BuiltPipeline:
                  profiler: Any = None, stage_workers: bool = False,
                  replicas: "Sequence[int] | None" = None,
                  devices: "Sequence[Sequence[int]] | None" = None,
-                 inventory: Any = None) -> "PipelineExecutor":
+                 inventory: Any = None, fault_injector: Any = None,
+                 max_group_retries: int = 3, quarantine_after: int = 1,
+                 retry_budget_ms: float | None = None,
+                 ) -> "PipelineExecutor":
         """Build a :class:`~repro.core.executor.PipelineExecutor` over the
         compiled stages (bounded token pool, eager async issue, optional
         per-stage micro-batching with bucketed ragged-group padding).
@@ -379,13 +382,20 @@ class BuiltPipeline:
         given per-stage worker counts (TBB parallel filters — see
         :func:`repro.core.partition.assign_replicas`); ``devices`` pins
         each replica to a device ordinal of ``inventory`` (the plan's
-        :attr:`~repro.core.partition.PipelinePlan.stage_devices`)."""
+        :attr:`~repro.core.partition.PipelinePlan.stage_devices`);
+        ``fault_injector`` / ``max_group_retries`` / ``quarantine_after``
+        / ``retry_budget_ms`` configure the executor's fault-tolerance
+        layer (see :mod:`repro.runtime.faults`)."""
         from .executor import PipelineExecutor
         return PipelineExecutor.from_pipeline(
             self, max_in_flight=max_in_flight, microbatch=microbatch,
             pad_microbatches=pad_microbatches, buckets=buckets,
             profiler=profiler, stage_workers=stage_workers,
-            replicas=replicas, devices=devices, inventory=inventory)
+            replicas=replicas, devices=devices, inventory=inventory,
+            fault_injector=fault_injector,
+            max_group_retries=max_group_retries,
+            quarantine_after=quarantine_after,
+            retry_budget_ms=retry_budget_ms)
 
     def run_async(self, tokens: Iterable[tuple | Any], *,
                   max_in_flight: int | None = None,

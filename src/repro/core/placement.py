@@ -186,6 +186,32 @@ def is_sw(value: Any) -> bool:
 # Device inventory — what the planner places replicas onto
 # --------------------------------------------------------------------------- #
 @dataclass(frozen=True)
+class InventoryDiff:
+    """Structured result of :meth:`DeviceInventory.refresh`.
+
+    ``old``/``new`` are the inventories before/after the probe; ``lost``
+    and ``gained`` name ordinals in the respective inventory's numbering;
+    ``survivors`` maps each surviving OLD ordinal to its NEW ordinal (the
+    re-densified numbering after a loss), which is how profiler stats
+    keyed by old ordinals follow their device across a re-plan.
+    """
+
+    old: "DeviceInventory"
+    new: "DeviceInventory"
+    lost: tuple[int, ...] = ()         # old ordinals no longer present
+    gained: tuple[int, ...] = ()       # new ordinals with no old identity
+    survivors: dict = field(default_factory=dict)   # old ordinal -> new
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.lost or self.gained)
+
+    def describe(self) -> str:
+        return (f"InventoryDiff({len(self.old)} -> {len(self.new)} devices; "
+                f"lost {list(self.lost)}, gained {list(self.gained)})")
+
+
+@dataclass(frozen=True)
 class DeviceSpec:
     """One placeable device: ordinal + platform + optional topology."""
 
@@ -268,9 +294,11 @@ class DeviceInventory:
         """Synthetic n-device inventory (planner tests / dry planning).
 
         Carries no ``jax.Device`` objects, so executors treat every
-        ordinal as the default device (planning-only inventory).
+        ordinal as the default device (planning-only inventory).  Each
+        spec gets a synthetic stable ``device_id`` so :meth:`refresh` can
+        match survivors across a :meth:`drop` re-densification.
         """
-        return cls([DeviceSpec(ordinal=i, platform=platform)
+        return cls([DeviceSpec(ordinal=i, platform=platform, device_id=i)
                     for i in range(n)])
 
     # -- queries ------------------------------------------------------------ #
@@ -327,6 +355,60 @@ class DeviceInventory:
             rows.append(f"  #{s.ordinal} {s.platform}"
                         f"(id={s.device_id}){c} x{s.speed:g}")
         return "\n".join(rows)
+
+    # -- elastic inventory --------------------------------------------------- #
+    def _identity(self, ordinal: int) -> tuple:
+        # device identity across probes: the backend id when one exists
+        # (real inventories), the ordinal itself for planning-only
+        # inventories (host(n) has no ids — position IS identity there)
+        s = self.specs[ordinal]
+        return (s.platform, s.device_id if s.device_id is not None
+                else ("ordinal", ordinal))
+
+    def refresh(self, probe: Any = None) -> InventoryDiff:
+        """Re-detect the device set and diff it against this inventory.
+
+        ``probe`` is a zero-arg callable returning the NEW
+        :class:`DeviceInventory` (default: :meth:`detect` — the real
+        re-probe; tests and fault benchmarks pass
+        ``FaultInjector.surviving``).  Devices are matched by identity
+        ``(platform, device_id)``, so a loss that re-densifies the
+        ordinals still maps every survivor old→new in the returned
+        :class:`InventoryDiff`.
+        """
+        new = probe() if probe is not None else DeviceInventory.detect()
+        old_ids = {self._identity(i): i for i in range(len(self.specs))}
+        new_ids = {new._identity(j): j for j in range(len(new.specs))}
+        survivors = {old_ids[k]: new_ids[k] for k in old_ids if k in new_ids}
+        lost = tuple(sorted(i for k, i in old_ids.items() if k not in new_ids))
+        gained = tuple(sorted(j for k, j in new_ids.items()
+                              if k not in old_ids))
+        return InventoryDiff(old=self, new=new, lost=lost, gained=gained,
+                             survivors=survivors)
+
+    def drop(self, ordinals: Any) -> "DeviceInventory":
+        """Survivors-only inventory: this one minus ``ordinals``,
+        re-densified (survivor k becomes ordinal ``rank(k)``) with
+        platform/id/coord/speed and any mapped ``jax.Device`` preserved.
+        """
+        gone = {self._check(int(o)) for o in ordinals}
+        keep = [i for i in range(len(self.specs)) if i not in gone]
+        if not keep:
+            raise ValueError("cannot drop every device in the inventory")
+        specs = [replace(self.specs[i], ordinal=j)
+                 for j, i in enumerate(keep)]
+        devs = [self._jax[i] for i in keep] if self._jax is not None else None
+        return DeviceInventory(specs, jax_devices=devs)
+
+    def reweighted(self, factors: dict) -> "DeviceInventory":
+        """Copy with per-ordinal speed multipliers applied (clamped
+        positive) — how the replanner de-weights an unhealthy device so
+        ``assign_replicas`` widens onto its healthy peers instead."""
+        specs = [replace(s, speed=max(s.speed
+                                      * float(factors.get(s.ordinal, 1.0)),
+                                      1e-6))
+                 for s in self.specs]
+        return DeviceInventory(specs, jax_devices=self._jax)
 
 
 # --------------------------------------------------------------------------- #

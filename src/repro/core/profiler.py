@@ -97,6 +97,11 @@ class StageProfiler:
         # the executor reports a device ordinal, so snapshots show which
         # chip served the stage (and which chip is the straggler)
         self._device: dict[tuple[int, int], list] = {}
+        # stage-call failures, attributed like the timings: the elastic
+        # replanner reads these (with device_ms) to de-weight an unhealthy
+        # device instead of re-widening onto it
+        self._errors: list[int] = [0] * n_stages
+        self._device_errors: dict[int, int] = {}
 
     def clone_for(self, n_stages: int) -> "StageProfiler":
         """Fresh profiler with the same knobs for a re-planned stage count."""
@@ -142,6 +147,19 @@ class StageProfiler:
                 rec[0] += 1
                 rec[1] = ms if rec[1] is None \
                     else (1.0 - self.alpha) * rec[1] + self.alpha * ms
+
+    def record_error(self, stage: int, replica: int | None = None,
+                     device: int | None = None) -> None:
+        """Record one failed stage call (the timing never lands — the call
+        raised — so errors are counted separately from the samples)."""
+        if not 0 <= stage < self.n_stages:
+            raise IndexError(f"stage {stage} out of range [0, {self.n_stages})")
+        del replica  # reserved for symmetry with record(); not tabulated yet
+        with self._lock:
+            self._errors[stage] += 1
+            if device is not None:
+                d = int(device)
+                self._device_errors[d] = self._device_errors.get(d, 0) + 1
 
     # -- queries --------------------------------------------------------------- #
     def samples(self, stage: int) -> int:
@@ -190,6 +208,16 @@ class StageProfiler:
             return {d: rec[1] for (s, d), rec in self._device.items()
                     if s == stage and rec[1] is not None}
 
+    def error_count(self, stage: int) -> int:
+        with self._lock:
+            return self._errors[stage]
+
+    def device_errors(self) -> dict[int, int]:
+        """Failed stage calls per device ordinal (all stages pooled) —
+        the error half of the replanner's unhealthy-device signal."""
+        with self._lock:
+            return dict(self._device_errors)
+
     @property
     def ready(self) -> bool:
         """True once every stage has ``min_samples`` measurements."""
@@ -217,6 +245,8 @@ class StageProfiler:
                 entry["replicas"] = reps
             if devs:
                 entry["devices"] = devs
+            if self.error_count(k):
+                entry["errors"] = self.error_count(k)
             stages.append(entry)
         return {"n_stages": self.n_stages, "sample_every": self.sample_every,
                 "window": self.window, "per_stage": stages}
@@ -230,6 +260,8 @@ class StageProfiler:
             self._ticks = 0
             self._replica.clear()
             self._device.clear()
+            self._errors = [0] * self.n_stages
+            self._device_errors.clear()
 
     # -- cost-model write-back -------------------------------------------------- #
     def apply_to_ir(self, ir: "CourierIR", plan: "PipelinePlan", *,

@@ -78,7 +78,7 @@ def _mem_dict(mem) -> dict:
     for k in keys:
         try:
             d[k] = int(getattr(mem, k))
-        except Exception:
+        except Exception:  # lint: allow-swallow(best-effort memory_analysis probe; absent fields are expected per backend)
             pass
     return d
 

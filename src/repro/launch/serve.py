@@ -35,8 +35,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core.executor import PipelineExecutor
+from repro.core.executor import ExecutorClosed, PipelineExecutor
 from repro.models import LM
+
+
+class DeadlineExceeded(TimeoutError):
+    """A request's ``deadline_ms`` expired before it was dispatched —
+    late work is degraded (failed fast) instead of re-queued forever."""
 
 
 # --------------------------------------------------------------------------- #
@@ -52,6 +57,7 @@ class Request:
     t_done: float | None = None       # when its outputs were ready
     result: Any = None
     error: BaseException | None = None
+    deadline_ms: float | None = None  # dispatch deadline (degrade when past)
     _event: threading.Event = field(default_factory=threading.Event)
 
     def wait(self, timeout: float | None = None) -> Any:
@@ -153,6 +159,8 @@ class RequestQueueServer:
         self._retirer: threading.Thread | None = None
         self._done: list[Request] = []
         self._batch_sizes: list[int] = []
+        self._rejected = 0               # failed without serving (stop/deadline)
+        self._stopped = False
         self._lock = threading.Lock()
         # zero-downtime executor hot-swap (see swap_executor)
         self._swap_lock = threading.Lock()
@@ -169,13 +177,37 @@ class RequestQueueServer:
         return self
 
     def stop(self) -> None:
-        """Drain the queue, serve everything submitted, then stop."""
+        """Drain the queue, serve everything submitted, then stop.
+
+        Requests that could not be served (racing submitters that enqueue
+        after the batcher's final drain pass) are failed with
+        :class:`~repro.core.executor.ExecutorClosed` rather than left
+        blocking in ``Request.wait`` until their own timeout.
+        """
         self._running = False
         if self._batcher is not None:
             self._batcher.join()
         self._issued.put(None)          # retirer sentinel
         if self._retirer is not None:
             self._retirer.join()
+        self._stopped = True
+        self._reject_pending()
+
+    def _reject_pending(self) -> None:
+        while True:
+            try:
+                r = self.queue.get_nowait()
+            except Empty:
+                return
+            self._fail_request(r, ExecutorClosed(
+                "server stopped before this request was served"))
+
+    def _fail_request(self, r: Request, err: BaseException) -> None:
+        r.error = err
+        r.t_done = time.perf_counter()
+        with self._lock:
+            self._rejected += 1
+        r._event.set()
 
     def __enter__(self) -> "RequestQueueServer":
         return self.start()
@@ -184,10 +216,25 @@ class RequestQueueServer:
         self.stop()
 
     # -- client API ---------------------------------------------------------- #
-    def submit(self, *args: Any) -> Request:
-        """Enqueue one request; blocks when the queue is full (backpressure)."""
-        r = Request(args=args, t_submit=time.perf_counter())
+    def submit(self, *args: Any, deadline_ms: float | None = None) -> Request:
+        """Enqueue one request; blocks when the queue is full (backpressure).
+
+        ``deadline_ms`` bounds the time-to-dispatch: a request still queued
+        that long after submission is failed with :class:`DeadlineExceeded`
+        instead of dispatched late (and its executor-side retries are
+        bounded by the same budget via ``retry_budget_ms``).
+        """
+        r = Request(args=args, t_submit=time.perf_counter(),
+                    deadline_ms=deadline_ms)
+        if self._stopped:
+            self._fail_request(r, ExecutorClosed(
+                "server is stopped; requests are no longer accepted"))
+            return r
         self.queue.put(r)
+        if self._stopped:
+            # close the submit/stop race: the drain pass may already have
+            # finished when this put landed
+            self._reject_pending()
         return r
 
     def swap_executor(self, new_executor: PipelineExecutor, *,
@@ -290,6 +337,8 @@ class RequestQueueServer:
                 "max": max(lat) if lat else 0.0,
             },
             "queue_ms_mean": float(np.mean(queue_ms)) if queue_ms else 0.0,
+            "queue_depth": self.queue.qsize(),
+            "rejected": self._rejected,
             "swaps": self.swaps,
             "executor": self.executor.stats().as_dict(),
             "profile": (self.executor.profiler.snapshot()
@@ -322,6 +371,21 @@ class RequestQueueServer:
             if not batch:
                 continue
             t_batch = time.perf_counter()
+            # degrade past-deadline requests instead of dispatching late:
+            # they failed their SLO while queued, executing them anyway
+            # would only delay the requests still inside theirs
+            live: list[Request] = []
+            for r in batch:
+                if r.deadline_ms is not None \
+                        and (t_batch - r.t_submit) * 1e3 > r.deadline_ms:
+                    self._fail_request(r, DeadlineExceeded(
+                        f"request missed its {r.deadline_ms:g} ms dispatch "
+                        "deadline"))
+                else:
+                    live.append(r)
+            batch = live
+            if not batch:
+                continue
             for r in batch:
                 r.t_batch = t_batch
             try:

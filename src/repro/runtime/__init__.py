@@ -1,5 +1,9 @@
 from .driver import (ElasticPlanner, FaultTolerantDriver, ReplanDecision,
                      StragglerMonitor, TrainResult)
+from .faults import (DeviceLostError, FaultInjector, FaultPlan,
+                     InjectedFault, as_injector)
 
 __all__ = ["ElasticPlanner", "FaultTolerantDriver", "ReplanDecision",
-           "StragglerMonitor", "TrainResult"]
+           "StragglerMonitor", "TrainResult",
+           "DeviceLostError", "FaultInjector", "FaultPlan",
+           "InjectedFault", "as_injector"]

@@ -29,7 +29,9 @@ import numpy as np
 from repro.core.ir import CourierIR
 from repro.core.partition import (PipelinePlan, StagePlan, assign_replicas,
                                   partition_optimal)
-from repro.core.placement import DeviceInventory, resolve_worker_budget
+from repro.core.placement import (DeviceInventory, InventoryDiff,
+                                  resolve_worker_budget)
+from repro.runtime.faults import as_injector
 
 
 # --------------------------------------------------------------------------- #
@@ -110,7 +112,10 @@ class ElasticPlanner:
     def __init__(self, layer_ir: CourierIR, db: Any = None, *,
                  min_gain: float = 1.15, margin: float | None = None,
                  min_samples: int = 4,
-                 inventory: DeviceInventory | None = None):
+                 inventory: DeviceInventory | None = None,
+                 fault_injector: Any = None, max_group_retries: int = 3,
+                 quarantine_after: int = 1,
+                 retry_budget_ms: float | None = None):
         from repro.core.costmodel import PROFILE_MARGIN
 
         self.layer_ir = layer_ir
@@ -121,6 +126,14 @@ class ElasticPlanner:
         self.min_gain = float(min_gain)
         self.margin = PROFILE_MARGIN if margin is None else float(margin)
         self.min_samples = int(min_samples)
+        # fault-tolerance knobs forwarded to every executor this planner
+        # builds (constructor state, NOT cache-key material: swapping the
+        # injector mid-run would otherwise force a spurious rebuild)
+        self.fault_injector = as_injector(fault_injector)
+        self.max_group_retries = int(max_group_retries)
+        self.quarantine_after = int(quarantine_after)
+        self.retry_budget_ms = (None if retry_budget_ms is None
+                                else float(retry_budget_ms))
         self._cached: tuple[tuple, Any] | None = None
         self._current_plan: PipelinePlan | None = None
         self._stagefn_cache: dict = {}    # stage identity -> StageFn (reuse)
@@ -184,7 +197,11 @@ class ElasticPlanner:
                                 microbatch=microbatch, profiler=profiler,
                                 stage_workers=stage_workers,
                                 replicas=replicas, devices=devices,
-                                inventory=self.inventory)
+                                inventory=self.inventory,
+                                fault_injector=self.fault_injector,
+                                max_group_retries=self.max_group_retries,
+                                quarantine_after=self.quarantine_after,
+                                retry_budget_ms=self.retry_budget_ms)
 
     def _widen(self, plan: PipelinePlan, worker_budget) -> tuple:
         """Run the widening pass on ``plan``; returns (replicas, devices)
@@ -461,6 +478,150 @@ class ElasticPlanner:
         self.last_decision = d
         return d
 
+    def replan_on_inventory_change(self, diff: InventoryDiff, *,
+                                   profiler: Any = None, stats: Any = None,
+                                   max_in_flight: int | None = None,
+                                   microbatch: int = 1, jit: bool = True,
+                                   stage_workers: bool = False,
+                                   worker_budget: "int | str | None" = None,
+                                   new_profiler: Any = None) -> ReplanDecision:
+        """Survivors-only re-plan after a device loss/gain.
+
+        Takes the structured :class:`~repro.core.placement.InventoryDiff`
+        from ``DeviceInventory.refresh()`` and, when it reports a change:
+
+        1. adopts ``diff.new`` as the planner's inventory (and renumbers
+           the fault injector's device-keyed state along
+           ``diff.survivors``);
+        2. builds a **survivors candidate**: the current stage boundaries
+           (no recompiles — every StageFn is reused) re-widened by
+           :func:`~repro.core.partition.assign_replicas` onto the
+           surviving devices, using measured stage medians when the
+           profiler has them;
+        3. **de-weights unhealthy survivors**: a surviving device whose
+           error count (executor stats + profiler) or per-stage
+           ``device_ms`` marks it slow has its inventory speed scaled
+           down, so the widening pass prefers its healthy peers;
+        4. runs the candidate through the static verify gate — an illegal
+           candidate keeps the current executor serving;
+        5. rebuilds the executor (shared StageFn cache) for the serving
+           layer to deploy via ``swap_executor`` — the zero-drop hot-swap.
+
+        Unlike :meth:`replan_from_profile` there is no hysteresis: a lost
+        device is a hard fact, not a noisy timing.
+        """
+        from repro.core.costmodel import replicated_bottleneck_ms
+        from repro.core.partition import clear_stage_devices
+
+        if self.db is None:
+            raise ValueError("ElasticPlanner needs a ModuleDatabase to build "
+                             "executors; pass db= at construction")
+        if self._current_plan is None:
+            raise ValueError("no current plan: call executor_for() before "
+                             "replan_on_inventory_change()")
+        self.replan_checks += 1
+        plan = self._current_plan
+        if not diff.changed:
+            d = ReplanDecision(False, "inventory unchanged", 0.0, 0.0, 1.0)
+            self.last_decision = d
+            return d
+
+        self.inventory = diff.new
+        if self.fault_injector is not None:
+            # scripted losses/counters are keyed by ordinal; follow the
+            # survivors into the re-densified numbering
+            self.fault_injector.remap_devices(diff.survivors)
+
+        # stage times for the candidate: measured medians when the profile
+        # has them (the loss usually happens mid-serve), model otherwise
+        times = []
+        for k, s in enumerate(plan.stages):
+            m = None
+            if profiler is not None and k < profiler.n_stages:
+                m = profiler.percentile_ms(k, 50.0)
+            times.append(float(m) if m is not None
+                         else float(s.est_time_ms or 0.0))
+        old_bottleneck = replicated_bottleneck_ms(times, plan.replicas)
+
+        # unhealthy-survivor de-weighting: error counts and straggling
+        # device_ms medians scale the surviving specs' speeds down
+        errs: dict[int, int] = {}
+        if stats is not None:
+            for d_, c in (getattr(stats, "device_errors", None) or {}).items():
+                errs[int(d_)] = errs.get(int(d_), 0) + int(c)
+        slow: dict[int, float] = {}
+        if profiler is not None:
+            if hasattr(profiler, "device_errors"):
+                for d_, c in profiler.device_errors().items():
+                    errs[int(d_)] = errs.get(int(d_), 0) + int(c)
+            for k in range(min(plan.n_stages, profiler.n_stages)):
+                per_dev = profiler.device_ms(k)
+                if len(per_dev) < 2:
+                    continue
+                med = float(np.median(list(per_dev.values())))
+                for d_, ms in per_dev.items():
+                    r = med / ms if ms > 0 else 1.0
+                    slow[d_] = min(slow.get(d_, 1.0), min(r, 1.0))
+        factors: dict[int, float] = {}
+        for old, new in diff.survivors.items():
+            f = slow.get(old, 1.0) / (1.0 + errs.get(old, 0))
+            if f < 1.0:
+                factors[new] = f
+        inv = diff.new.reweighted(factors) if factors else diff.new
+
+        cand = PipelinePlan(
+            stages=[StagePlan(node_names=list(s.node_names),
+                              est_time_ms=float(t), kind=s.kind,
+                              placements=list(s.placements),
+                              comm_in_bytes=s.comm_in_bytes)
+                    for s, t in zip(plan.stages, times)],
+            policy="survivors")
+        wb = resolve_worker_budget(worker_budget, cand.n_stages, inv)
+        assign_replicas(cand, self.layer_ir, worker_budget=wb, inventory=inv)
+
+        from repro.analysis.verify import PlanVerificationError, check_plan
+        try:
+            check_plan(self.layer_ir, cand, db=self.db, inventory=inv,
+                       where="ElasticPlanner.replan_on_inventory_change")
+        except PlanVerificationError as e:
+            d = ReplanDecision(
+                False, "survivors candidate failed verification "
+                f"({', '.join(e.rules)})", old_bottleneck, old_bottleneck,
+                1.0)
+            self.last_decision = d
+            return d
+
+        replicas = cand.replicas if any(r > 1 for r in cand.replicas) \
+            else None
+        if replicas is None:
+            clear_stage_devices(cand)
+        devices = cand.stage_devices if replicas is not None else None
+        prof = new_profiler
+        if prof is None and profiler is not None \
+                and hasattr(profiler, "clone_for"):
+            prof = profiler.clone_for(cand.n_stages)
+        ex = self._build_executor(plan=cand, max_in_flight=max_in_flight,
+                                  microbatch=microbatch, jit=jit,
+                                  profiler=prof, stage_workers=stage_workers,
+                                  replicas=replicas, devices=devices)
+        key = self._cache_key(cand, replicas, max_in_flight, microbatch,
+                              jit, stage_workers, prof, devices)
+        self._cached = (key, ex)
+        self._current_plan = cand
+        self.rebuilds += 1
+        self.replans += 1
+        d = ReplanDecision(
+            True,
+            f"inventory changed: lost {list(diff.lost)}, "
+            f"gained {list(diff.gained)} -> re-widened onto "
+            f"{len(diff.new)} survivors",
+            old_bottleneck, cand.effective_bottleneck_ms,
+            old_bottleneck / max(cand.effective_bottleneck_ms, 1e-12),
+            plan=cand, executor=ex, widened=True,
+            replicas=list(cand.replicas))
+        self.last_decision = d
+        return d
+
 
 # --------------------------------------------------------------------------- #
 # Fault-tolerant training driver
@@ -478,9 +639,15 @@ class FaultTolerantDriver:
     """Checkpoint/restart loop around a pure ``step_fn(state, batch)``.
 
     ``step_fn`` returns (new_state, metrics-dict with "loss").
-    ``fail_hook(step)`` is the fault-injection point used by tests (raises
-    to simulate a node failure); production leaves it None and real
-    exceptions (device loss, preemption) take the same path.
+    ``faults`` is the fault-injection point: a
+    :class:`~repro.runtime.faults.FaultPlan` or built injector whose
+    :meth:`~repro.runtime.faults.FaultInjector.on_step` is called before
+    each step — the same harness the serving executors hook, so training
+    and serving share one injection API.  ``fail_hook(step)`` (the legacy
+    callback) is still accepted and wrapped via
+    :meth:`~repro.runtime.faults.FaultInjector.from_hook`.  Production
+    leaves both None; real exceptions (device loss, preemption) take the
+    same recovery path.
     """
 
     def __init__(self, step_fn: Callable, store, data, *,
@@ -488,7 +655,10 @@ class FaultTolerantDriver:
                  async_ckpt: bool = True,
                  straggler: StragglerMonitor | None = None,
                  redispatch_stragglers: bool = False,
+                 faults: Any = None,
                  fail_hook: Callable[[int], None] | None = None):
+        from repro.runtime.faults import FaultInjector
+
         self.step_fn = step_fn
         self.store = store
         self.data = data
@@ -497,14 +667,20 @@ class FaultTolerantDriver:
         self.async_ckpt = async_ckpt
         self.straggler = straggler or StragglerMonitor()
         self.redispatch = redispatch_stragglers
-        self.fail_hook = fail_hook
+        if faults is not None and fail_hook is not None:
+            raise ValueError("pass faults= OR the legacy fail_hook=, not both")
+        self._injector = (FaultInjector.from_hook(fail_hook)
+                          if fail_hook is not None else as_injector(faults))
 
     def run(self, state: Any, n_steps: int) -> tuple[Any, TrainResult]:
         import jax
 
         restarts = 0
         redispatches = 0
-        losses: list[float] = []
+        # keyed by step so a restart that REPLAYS steps overwrites their
+        # entries instead of appending duplicates (the pre-crash entries
+        # for steps after the checkpoint used to double-count)
+        losses: dict[int, float] = {}
         start = 0
         # resume from latest checkpoint if one exists
         latest = self.store.latest_step()
@@ -515,8 +691,8 @@ class FaultTolerantDriver:
         step = start
         while step < n_steps:
             try:
-                if self.fail_hook is not None:
-                    self.fail_hook(step)
+                if self._injector is not None:
+                    self._injector.on_step(step)
                 batch = self.data.batch(step)
                 t0 = time.perf_counter()
                 state, metrics = self.step_fn(state, batch)
@@ -527,7 +703,7 @@ class FaultTolerantDriver:
                     state, metrics = self.step_fn(state, batch)
                     jax.block_until_ready(metrics["loss"])
                     redispatches += 1
-                losses.append(float(metrics["loss"]))
+                losses[step] = float(metrics["loss"])
                 step += 1
                 if step % self.ckpt_every == 0 or step == n_steps:
                     saver = (self.store.save_async if self.async_ckpt
@@ -545,8 +721,10 @@ class FaultTolerantDriver:
                 state, extra = self.store.restore(latest, like=state)
                 step = int(extra.get("next_step", latest))
         self.store.wait()
+        loss_seq = [losses[k] for k in sorted(losses)]
         return state, TrainResult(steps_done=step,
-                                  final_loss=losses[-1] if losses else float("nan"),
+                                  final_loss=loss_seq[-1] if loss_seq
+                                  else float("nan"),
                                   restarts=restarts,
                                   straggler_redispatches=redispatches,
-                                  losses=losses)
+                                  losses=loss_seq)

@@ -83,6 +83,27 @@ SCHEMA = {
             "out_of_order": int,
         },
     },
+    "faults": {
+        "device_loss": {
+            "requests": int, "served": int, "dropped": int,
+            "out_of_order": int, "retries": int, "quarantined": int,
+            "lost_device": int, "replicas_before": list,
+            "replicas_after": list, "tps_before": NUM, "tps_after": NUM,
+            "tps_survivor": NUM, "recovery": NUM, "swaps": int,
+            "replanned": bool,
+        },
+        "transient": {
+            "requests": int, "served": int, "dropped": int,
+            "out_of_order": int, "retries": int, "quarantined": int,
+            "errors_injected": int, "tps_clean": NUM, "tps_faulty": NUM,
+            "recovery": NUM, "results_match": bool,
+        },
+        "harris_transient": {
+            "requests": int, "served": int, "dropped": int,
+            "out_of_order": int, "retries": int, "errors_injected": int,
+            "replicas": list, "results_match": bool,
+        },
+    },
 }
 
 
@@ -148,6 +169,22 @@ def test_committed_bench_json_matches_schema():
     assert dev["pinning"]["out_of_order"] == 0
     assert dev["hot_swap"]["dropped"] == 0
     assert dev["hot_swap"]["out_of_order"] == 0
+    # fault-tolerance acceptance: zero drops through a mid-run device loss
+    # AND a transient burst, in-order retirement throughout, post-recovery
+    # throughput within 0.8x of the survivors-only optimum, and retried
+    # results identical to the fault-free run
+    flt = data["faults"]
+    assert flt["device_loss"]["dropped"] == 0
+    assert flt["device_loss"]["out_of_order"] == 0
+    assert flt["device_loss"]["quarantined"] >= 1
+    assert flt["device_loss"]["replanned"] is True
+    assert flt["device_loss"]["recovery"] >= 0.8
+    assert flt["transient"]["dropped"] == 0
+    assert flt["transient"]["out_of_order"] == 0
+    assert flt["transient"]["recovery"] >= 0.8
+    assert flt["transient"]["results_match"] is True
+    assert flt["harris_transient"]["dropped"] == 0
+    assert flt["harris_transient"]["results_match"] is True
 
 
 @pytest.mark.slow

@@ -131,16 +131,14 @@ def _toy_step(state, batch):
 
 
 def test_driver_restarts_from_checkpoint(tmp_path):
+    from repro.runtime.faults import FaultPlan
+
     store = CheckpointStore(str(tmp_path))
-    fails = {"armed": True}
-
-    def fail_hook(step):
-        if step == 7 and fails["armed"]:
-            fails["armed"] = False
-            raise RuntimeError("injected node failure")
-
+    # a scripted step fault fires ONCE, so the restart's replay of step 7
+    # succeeds (the legacy fail_hook= path is covered in test_faults.py)
     drv = FaultTolerantDriver(_toy_step, store, _ToyData(), ckpt_every=5,
-                              async_ckpt=False, fail_hook=fail_hook)
+                              async_ckpt=False,
+                              faults=FaultPlan().fail_step([7]))
     state, res = drv.run({"w": jnp.ones(3)}, n_steps=12)
     assert res.restarts == 1
     assert res.steps_done == 12
