@@ -36,7 +36,7 @@ def main() -> None:
     from benchmarks import (analysis, devices, faults, fig4_callgraph,
                             fusion, replan, replicate, roofline,
                             table1_pipeline, table2_modules,
-                            table3_resources)
+                            table3_resources, trace_pipeline)
 
     smoke = "--smoke" in sys.argv[1:]
     print("name,value,derived")
@@ -90,6 +90,16 @@ def main() -> None:
             print(f"smoke.verify.overhead,{ver['ratio']},"
                   f"verify {ver['verify_ms']} ms vs build {ver['build_ms']} "
                   f"ms over {ver['n_nodes']} nodes")
+            trc = trace_pipeline.payload(smoke=True)  # asserts >= 1.5x + parity
+            t = trc["transformer"]
+            fused = ";".join(t["fused_nodes"]) or "none"
+            print(f"smoke.trace.speedup,{t['speedup']},"
+                  f"traced transformer async {t['tps_async']} tps vs "
+                  f"sequential {t['tps_sequential']} tps; fused {fused}")
+            print(f"smoke.trace.results_match,{int(t['results_match'])},"
+                  f"{t['captured_inputs']} captured weights; recurrent "
+                  f"{int(trc['recurrent']['results_match'])}; serving "
+                  f"{int(trc['serving']['results_match'])}")
             path = table1_pipeline.write_bench_json(smoke=True)
             print(f"smoke.bench_json,0,{path}")
         except Exception as e:
@@ -102,8 +112,8 @@ def main() -> None:
     # loops, and subprocesses are the noisiest neighbors for the wall-clock
     # benchmarks that precede them
     for mod in (table1_pipeline, table2_modules, table3_resources,
-                fig4_callgraph, fusion, roofline, analysis, replan,
-                replicate, devices, faults):
+                fig4_callgraph, fusion, roofline, analysis, trace_pipeline,
+                replan, replicate, devices, faults):
         _emit(mod)
     try:
         path = table1_pipeline.write_bench_json()

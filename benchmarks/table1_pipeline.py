@@ -177,7 +177,8 @@ def bench_payload(smoke: bool = False) -> dict:
     """sequential / wavefront / async / fused tokens-per-sec + bottleneck ms,
     plus the fusion, adaptive-replan, and stage-replication benchmarks —
     the perf trajectory tracked across PRs."""
-    from benchmarks import devices, faults, fusion, replan, replicate
+    from benchmarks import (devices, faults, fusion, replan, replicate,
+                            trace_pipeline)
 
     n_frames = 2 if smoke else 12
     size = (64, 96) if smoke else (270, 480)
@@ -187,6 +188,7 @@ def bench_payload(smoke: bool = False) -> dict:
     # serving loops are the noisiest neighbors of all
     fus = fusion.payload(smoke=smoke)
     m = measured_numbers(n_frames=n_frames, hw=True, size=size)
+    trc = trace_pipeline.payload(smoke=smoke)
     rep = replan.payload(smoke=smoke)
     wide = replicate.payload(smoke=smoke)
     dev = devices.payload(smoke=smoke)
@@ -210,6 +212,7 @@ def bench_payload(smoke: bool = False) -> dict:
                           "async_ms", "microbatch_ms")},
         "compile_count_steady": m["compile_count"],
         "fusion": fus,
+        "trace": trc,
         "replan": rep,
         "replicate": wide,
         "devices": dev,

@@ -1,0 +1,197 @@
+"""Trace-to-pipeline benchmark — a transformer served from its own trace.
+
+The generality claim of this repo: any workload written against
+``Library`` calls — weights closed over, no model-code edits — traces
+into a causal graph that lowers through partition → fusion → replication
+→ verify and serves behind the request queue.  This benchmark measures
+that path end-to-end on the model-zoo transformer and asserts the two
+acceptance bars in smoke mode:
+
+* the async traced pipeline sustains >= 1.5x the sequential (eager,
+  untraced) tokens/s, and
+* the pipeline's results match the untraced model bit-exactly
+  (``jax.jit`` of the very same user function — XLA's cross-op fusion
+  makes *eager* float32 the wrong bit-parity anchor, see EXPERIMENTS.md).
+
+Also traces the recurrent (RWKV-shift + SSM-scan) zoo block to show the
+trace path is not transformer-shaped, and runs the dynamic-batching
+serving loop over the traced pipeline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+REPS = 5
+
+
+def _best_s(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def transformer_numbers(smoke: bool = False) -> dict:
+    """Trace the zoo transformer, lower it, and race the async pipeline
+    against the unmodified eager app over a token stream."""
+    from repro.core import PipelineGenerator
+    from repro.core.tracer import Frontend, Library
+    from repro.models.zoo import (init_transformer_params, make_zoo_db,
+                                  transformer_demo)
+
+    seq_len, d, ff, vocab = (16, 32, 64, 64) if smoke else (64, 128, 256, 512)
+    n_tokens = 8 if smoke else 24
+    reps = 3 if smoke else REPS
+
+    db = make_zoo_db()
+    app = transformer_demo(Library(db), init_transformer_params(
+        jax.random.PRNGKey(0), n_layers=2, d=d, ff=ff, n_heads=2 if smoke
+        else 4, vocab=vocab))
+    toks = [jax.random.normal(jax.random.PRNGKey(10 + i), (seq_len, d),
+                              jnp.float32) for i in range(n_tokens)]
+
+    ir, _ = Frontend(db).trace(app, toks[0])
+    pipe = PipelineGenerator(db).generate(ir, policy="optimal", fuse=True,
+                                          max_stages=4)
+    S = pipe.plan.n_stages
+    ex = pipe.executor(max_in_flight=2 * S + 1)
+    ex.warmup(toks[0])
+    jax.block_until_ready(app(toks[0]))
+
+    # interleave the reps so both paths sample the same background noise
+    t_seq = t_async = float("inf")
+    for _ in range(reps):
+        t_seq = min(t_seq, _best_s(lambda: [app(t) for t in toks], 1))
+        t_async = min(t_async, _best_s(lambda: ex.run(toks), 1))
+
+    ref = jax.jit(app)
+    match = all(bool(jnp.array_equal(y, ref(t)))
+                for y, t in zip(ex.run(toks), toks))
+    return {
+        "seq_len": seq_len, "d_model": d, "n_tokens": n_tokens,
+        "n_nodes": len(pipe.ir.nodes), "n_stages": S,
+        "fused_nodes": [n.name for n in pipe.ir.nodes if n.fused_from],
+        "captured_inputs": len(pipe.captured),
+        "token_inputs": len(pipe.graph_inputs),
+        "tps_sequential": round(n_tokens / max(t_seq, 1e-9), 2),
+        "tps_async": round(n_tokens / max(t_async, 1e-9), 2),
+        "speedup": round(t_seq / max(t_async, 1e-9), 3),
+        "results_match": match,
+    }
+
+
+def recurrent_numbers(smoke: bool = False) -> dict:
+    """The same trace path over the RWKV/SSM block — different op mix,
+    same bit-parity bar vs ``jax.jit`` of the untraced function."""
+    from repro.core import PipelineGenerator
+    from repro.core.tracer import Frontend, Library
+    from repro.models.zoo import (init_recurrent_params, make_zoo_db,
+                                  recurrent_demo)
+
+    seq_len, d = (16, 32) if smoke else (64, 64)
+    db = make_zoo_db()
+    app = recurrent_demo(Library(db),
+                         init_recurrent_params(jax.random.PRNGKey(1), d=d))
+    x = jax.random.normal(jax.random.PRNGKey(2), (seq_len, d), jnp.float32)
+    ir, _ = Frontend(db).trace(app, x)
+    pipe = PipelineGenerator(db).generate(ir, policy="optimal", fuse=True,
+                                          max_stages=2)
+    match = bool(jnp.array_equal(pipe(x), jax.jit(app)(x)))
+    return {"n_nodes": len(pipe.ir.nodes), "n_stages": pipe.plan.n_stages,
+            "captured_inputs": len(pipe.captured), "results_match": match}
+
+
+def serving_numbers(smoke: bool = False) -> dict:
+    """Dynamic-batching request queue over the traced transformer."""
+    from repro.launch.serve import serve_traced_transformer_demo
+
+    kw = (dict(n_requests=8, seq_len=16, d=32, ff=64, n_heads=2, vocab=64)
+          if smoke else dict(n_requests=24, seq_len=32, d=64, ff=128,
+                             n_heads=4, vocab=128))
+    s = serve_traced_transformer_demo(max_batch=4, max_wait_ms=4.0, **kw)
+    return {
+        "requests": int(s["requests_served"]),
+        "mean_batch_size": round(float(s["mean_batch_size"]), 2),
+        "latency_p95_ms": round(float(s["latency_ms"]["p95"]), 2),
+        "results_match": bool(s["results_match"]),
+        "fused_nodes": list(s["fused_nodes"]),
+        "captured_inputs": int(s["captured_inputs"]),
+        "replicas": s["replicas"],
+    }
+
+
+_payload_cache: dict = {}
+
+
+def payload(smoke: bool = False) -> dict:
+    if smoke not in _payload_cache:
+        out = {"transformer": transformer_numbers(smoke=smoke),
+               "recurrent": recurrent_numbers(smoke=smoke),
+               "serving": serving_numbers(smoke=smoke)}
+        if smoke:
+            # the CI bars (ISSUE 8 acceptance): async traced pipeline beats
+            # the unmodified eager app >= 1.5x, results bit-match the
+            # untraced model, and the registered mega-kernel actually fired
+            # on the traced graph
+            t = out["transformer"]
+            assert t["speedup"] >= 1.5, \
+                f"traced pipeline speedup {t['speedup']} < 1.5x"
+            assert t["results_match"], "traced pipeline != jit(untraced app)"
+            assert t["fused_nodes"], "mega-kernel did not fire on the trace"
+            assert t["captured_inputs"] > 0 and t["token_inputs"] == 1
+            assert out["recurrent"]["results_match"]
+            assert out["serving"]["results_match"]
+        _payload_cache[smoke] = out
+    return _payload_cache[smoke]
+
+
+def run() -> list:
+    p = payload()
+    t, r, s = p["transformer"], p["recurrent"], p["serving"]
+    fused = ";".join(t["fused_nodes"]) or "none"
+    return [
+        ("trace.transformer.n_nodes", t["n_nodes"],
+         f"{t['n_stages']} stages; fused {fused}"),
+        ("trace.transformer.captured_inputs", t["captured_inputs"],
+         f"closure weights promoted to graph inputs; "
+         f"{t['token_inputs']} per-token input"),
+        ("trace.transformer.tps_sequential", t["tps_sequential"],
+         f"eager untraced app, {t['n_tokens']} x [{t['seq_len']},"
+         f"{t['d_model']}] tokens"),
+        ("trace.transformer.tps_async", t["tps_async"],
+         "async executor over the traced+fused pipeline"),
+        ("trace.transformer.speedup", t["speedup"],
+         "async traced pipeline vs eager untraced; CI bar is 1.5"),
+        ("trace.transformer.results_match", int(t["results_match"]),
+         "bit-exact vs jax.jit of the untraced model"),
+        ("trace.recurrent.results_match", int(r["results_match"]),
+         f"RWKV-shift+SSM-scan block, {r['n_nodes']} nodes"),
+        ("trace.serving.requests", s["requests"],
+         f"mean batch {s['mean_batch_size']}; replicas {s['replicas']}"),
+        ("trace.serving.latency_p95_ms", s["latency_p95_ms"],
+         "per-request (queue + execute)"),
+        ("trace.serving.results_match", int(s["results_match"]),
+         "served results vs jit(untraced app)"),
+    ]
+
+
+if __name__ == "__main__":
+    import sys
+    smoke = "--smoke" in sys.argv[1:]
+    if smoke:
+        p = payload(smoke=True)
+        t = p["transformer"]
+        print(f"smoke.trace.speedup,{t['speedup']},"
+              f"async {t['tps_async']} tps vs sequential "
+              f"{t['tps_sequential']} tps")
+        print(f"smoke.trace.results_match,{int(t['results_match'])},"
+              f"recurrent {int(p['recurrent']['results_match'])}; "
+              f"serving {int(p['serving']['results_match'])}")
+    else:
+        for row in run():
+            print(",".join(str(x) for x in row))

@@ -190,6 +190,32 @@ def _rule_output_missing(ctx: VerifyContext) -> Iterable[Diagnostic]:
         for o in ctx.ir.graph_outputs if o not in produced]
 
 
+@verify_rule("dangling-value")
+def _rule_dangling_value(ctx: VerifyContext) -> Iterable[Diagnostic]:
+    """Every producer-less value that is consumed (or owed to the caller)
+    must be a graph input.
+
+    The Frontend registers mid-trace first sightings (closure-captured
+    weights) as captured graph inputs; an IR where a consumed value has no
+    producer *and* no graph-input registration is the pre-fix tracer bug —
+    the executor would have no way to ever feed it."""
+    out: list[Diagnostic] = []
+    inputs = set(ctx.ir.graph_inputs)
+    for vn, v in ctx.ir.values.items():
+        if v.producer is not None or vn in inputs:
+            continue
+        if v.consumers or vn in ctx.ir.graph_outputs:
+            out.append(Diagnostic(
+                rule="dangling-value", node=vn,
+                message=(f"value {vn!r} has no producer and is not a graph "
+                         f"input, yet is "
+                         + ("consumed by " + ", ".join(v.consumers)
+                            if v.consumers else "a graph output")),
+                hint="a traced operand was never registered as a (captured) "
+                     "graph input — retrace, or add it to ir.graph_inputs"))
+    return out
+
+
 # --------------------------------------------------------------------------- #
 # fused-node routing + shape consistency
 # --------------------------------------------------------------------------- #

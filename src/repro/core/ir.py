@@ -73,6 +73,13 @@ class Node:
     fn_key: str                            # database key, e.g. "cvtColor"
     inputs: list[str] = field(default_factory=list)    # Value names
     outputs: list[str] = field(default_factory=list)   # Value names
+    # keyword binding per input: parallel to ``inputs``; None = positional,
+    # a string = the keyword the array was passed under at trace time.  Stage
+    # replay must honor it — a library fn whose software impl takes arrays by
+    # keyword (e.g. ``def f(x, *, w)``) misbinds if w is appended positionally.
+    # Empty list (the default, and what pre-existing serialized IRs decode to)
+    # means all-positional.
+    input_kw: list[str | None] = field(default_factory=list)
     params: dict[str, Any] = field(default_factory=dict)  # static call params
     time_ms: float | None = None           # profiled processing time
     # provenance of time_ms: "estimate" (roofline/synthesis-report analog,
@@ -127,6 +134,12 @@ class CourierIR:
         self.values: dict[str, Value] = {}
         self.graph_inputs: list[str] = []
         self.graph_outputs: list[str] = []
+        # value name -> array for graph inputs the Frontend discovered
+        # mid-trace (closure-captured weights/constants) rather than as
+        # top-level call arguments.  They live in ``graph_inputs`` — the IR
+        # treats them as ordinary inputs — but the backend stages their
+        # arrays from here so callers only feed the per-token arguments.
+        self.captured: dict[str, Any] = {}
 
     # -- construction ------------------------------------------------------ #
     def add_value(self, name: str, shape: Sequence[int], dtype: Any,
@@ -200,7 +213,8 @@ class CourierIR:
         lines = [f"CourierIR({self.name})  total={self.total_time_ms():.1f} ms"]
         for vn in self.graph_inputs:
             v = self.values[vn]
-            lines.append(f"  (in)  {vn}: {v.shape} {v.dtype}  [{v.nbytes} B]")
+            tag = " (captured)" if vn in self.captured else ""
+            lines.append(f"  (in)  {vn}: {v.shape} {v.dtype}  [{v.nbytes} B]{tag}")
         for n in self.nodes:
             t = f"{n.time_ms:.1f} ms" if n.time_ms is not None else "?"
             p = Placement.parse(n.placement).short()
@@ -220,6 +234,8 @@ class CourierIR:
             "values": {k: asdict(v) for k, v in self.values.items()},
             "graph_inputs": self.graph_inputs,
             "graph_outputs": self.graph_outputs,
+            # names only — the arrays themselves are runtime state, not IR
+            "captured": sorted(self.captured),
         }, indent=2)
 
     @classmethod

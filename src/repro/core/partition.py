@@ -494,7 +494,11 @@ def assign_stage_devices(plan: PipelinePlan, inventory: DeviceInventory,
         s0 = plan.stages[0]
         s0.xfer_in_ms = 0.0
         if multi and ir is not None:
-            in_bytes = sum(ir.values[v].nbytes for v in ir.graph_inputs)
+            # captured inputs (closure weights) are staged once at deploy,
+            # not shipped per token — only true token inputs cost transfer
+            cap = getattr(ir, "captured", {})
+            in_bytes = sum(ir.values[v].nbytes for v in ir.graph_inputs
+                           if v not in cap)
             if in_bytes > 0:
                 bw = min(inventory.device_class(d).xfer_bw
                          for d in s0.devices)
@@ -526,6 +530,7 @@ def _clone_ir_shell(ir: CourierIR, name: str) -> CourierIR:
                   for k, v in ir.values.items()}
     out.graph_inputs = list(ir.graph_inputs)
     out.graph_outputs = list(ir.graph_outputs)
+    out.captured = dict(getattr(ir, "captured", {}))
     return out
 
 
@@ -689,6 +694,13 @@ def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
         e = db.lookup(n.fn_key)
         return e is not None and e.has_hw(*[ir.values[i].shape for i in n.inputs])
 
+    def positional(n: Node) -> bool:
+        # fused modules (dedicated and composed) bind their operands
+        # positionally via ext_inputs; a node whose arrays were passed by
+        # keyword at trace time has no positional slot to map them to, so
+        # runs containing one are conservatively left unfused
+        return not any(k is not None for k in (n.input_kw or []))
+
     def chains_to_next(i: int) -> bool:
         if i + 1 >= len(ir.nodes):
             return False
@@ -701,7 +713,9 @@ def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
     new_nodes: list[Node] = []
     while i < len(ir.nodes):
         j = i
-        while hw(ir.nodes[j]) and chains_to_next(j) and hw(ir.nodes[j + 1]):
+        while (hw(ir.nodes[j]) and positional(ir.nodes[j])
+               and chains_to_next(j)
+               and hw(ir.nodes[j + 1]) and positional(ir.nodes[j + 1])):
             j += 1
         run = ir.nodes[i:j + 1]
         if len(run) >= 2:

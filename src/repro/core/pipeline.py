@@ -91,19 +91,32 @@ def _liveness(ir: CourierIR, plan: PipelinePlan) -> list[list[str]]:
 
     boundary[0] = graph inputs; boundary[k] = values produced before stage k
     that are still needed by stages >= k or are graph outputs.
+
+    Captured graph inputs (closure-held weights the Frontend registered in
+    ``ir.captured``) never cross boundaries — they are per-pipeline
+    constants baked into the stage closures, not per-token traffic; shipping
+    a weight matrix through every boundary (and stacking it per token under
+    micro-batching) would swamp the stream.  The one exception: a captured
+    value that *is* a graph output stays live at the final boundary so the
+    executor can retire it like any other result.
     """
     name_to_stage: dict[str, int] = {}
     for si, s in enumerate(plan.stages):
         for nn in s.node_names:
             name_to_stage[nn] = si
 
-    boundaries: list[list[str]] = [list(ir.graph_inputs)]
+    cap = set(getattr(ir, "captured", ()))
+    boundaries: list[list[str]] = [[v for v in ir.graph_inputs
+                                    if v not in cap]]
     produced: set[str] = set(ir.graph_inputs)
     for k in range(1, plan.n_stages + 1):
         for nn in plan.stages[k - 1].node_names:
             produced.update(ir.node(nn).outputs)
         live: list[str] = []
         for v in produced:
+            if v in cap and not (k == plan.n_stages
+                                 and v in ir.graph_outputs):
+                continue
             needed = any(
                 name_to_stage.get(c, -1) >= k for c in ir.values[v].consumers
             ) or v in ir.graph_outputs
@@ -278,17 +291,25 @@ def make_stage_fns(ir: CourierIR, db: ModuleDatabase, plan: PipelinePlan,
             fns.append(cache[key])
             continue
         impls = [_resolve_impl(n, ir, db) for n in nodes]
+        captured = dict(getattr(ir, "captured", {}))
 
         def stage(env: dict, _nodes=tuple(nodes), _impls=tuple(impls),
-                  _live=tuple(live_out)):
+                  _live=tuple(live_out), _cap=captured):
             env = dict(env)
             for node, impl in zip(_nodes, _impls):
-                args = [env[v] for v in node.inputs]
-                out = impl(*args, **node.params)
+                # captured operands come from the closure (pipeline-held
+                # constants), everything else from the live env; keyword-
+                # bound arrays (input_kw) replay under their trace-time name
+                kws = node.input_kw or [None] * len(node.inputs)
+                pos = [env[v] if v in env else _cap[v]
+                       for v, kw in zip(node.inputs, kws) if kw is None]
+                kw = {kw: env[v] if v in env else _cap[v]
+                      for v, kw in zip(node.inputs, kws) if kw is not None}
+                out = impl(*pos, **kw, **node.params)
                 outs = out if isinstance(out, (tuple, list)) else (out,)
                 for name, o in zip(node.outputs, outs):
                     env[name] = o
-            return {k2: env[k2] for k2 in _live}
+            return {k2: env[k2] if k2 in env else _cap[k2] for k2 in _live}
 
         sf = StageFn(stage, jit=jit, donate=can_donate)
         if cache is not None:
@@ -305,9 +326,13 @@ class BuiltPipeline:
     ir: CourierIR
     plan: PipelinePlan
     stage_fns: list[Callable]
-    graph_inputs: list[str]
+    graph_inputs: list[str]                  # per-token inputs callers feed
     graph_outputs: list[str]
     max_in_flight: int | None = None         # TBB token-pool size
+    # captured graph inputs (closure-held weights/constants discovered by the
+    # Frontend): bound by the stage closures, never passed per token —
+    # ``graph_inputs`` above already excludes them.
+    captured: dict[str, Any] = field(default_factory=dict)
     # lazily built jit(vmap(stage)) executables, hoisted here (not on each
     # executor) so every executor over this pipeline shares one compiled set
     # — rebuilding an executor must not recompile in steady state.
@@ -460,7 +485,8 @@ class BuiltPipeline:
         return dict(zip(self.graph_inputs, args))
 
     def _out_of(self, env: dict):
-        outs = tuple(env[o] for o in self.graph_outputs)
+        outs = tuple(env[o] if o in env else self.captured[o]
+                     for o in self.graph_outputs)
         return outs[0] if len(outs) == 1 else outs
 
 
@@ -507,7 +533,9 @@ class PipelineGenerator:
         from repro.analysis.verify import check_plan
         check_plan(ir, plan, db=self.db, where="PipelineGenerator.generate")
         fns = make_stage_fns(ir, self.db, plan, jit=jit, donate=donate)
+        cap = dict(getattr(ir, "captured", {}))
+        token_inputs = [g for g in ir.graph_inputs if g not in cap]
         return BuiltPipeline(ir=ir, plan=plan, stage_fns=fns,
-                             graph_inputs=list(ir.graph_inputs),
+                             graph_inputs=token_inputs,
                              graph_outputs=list(ir.graph_outputs),
-                             max_in_flight=max_in_flight)
+                             max_in_flight=max_in_flight, captured=cap)

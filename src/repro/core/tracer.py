@@ -20,6 +20,7 @@ graph input.
 """
 from __future__ import annotations
 
+import inspect
 import threading
 import time
 from dataclasses import dataclass, field
@@ -32,7 +33,8 @@ import numpy as np
 from .database import ModuleDatabase, ModuleEntry, default_db
 from .ir import CourierIR, Node
 
-__all__ = ["Library", "Frontend", "deploy", "current_mode"]
+__all__ = ["Library", "Frontend", "deploy", "current_mode",
+           "TraceBindingError"]
 
 
 # --------------------------------------------------------------------------- #
@@ -99,10 +101,39 @@ class _TraceRecord:
     out_ids: list[int]
     in_meta: list[tuple[tuple[int, ...], str]]
     out_meta: list[tuple[tuple[int, ...], str]]
+    in_kw: list[str | None]                # keyword per input (None = positional)
+    in_arrays: list[Any]                   # the operands themselves (staging)
     params: dict[str, Any]
     time_ms: float
     t_start: float
     t_end: float
+
+
+def _positional_param_names(fn: Callable) -> list[str | None] | None:
+    """Names of fn's positional parameters, in order, for replay rebinding.
+
+    ``None`` entries mark POSITIONAL_ONLY params (cannot be rebound by
+    keyword); a ``None`` return means the signature is unavailable (C
+    builtins) and nothing can be rebound at all.  The list stops at
+    ``*args`` — positions beyond it are unnameable.
+    """
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return None
+    names: list[str | None] = []
+    for p in sig.parameters.values():
+        if p.kind == p.POSITIONAL_OR_KEYWORD:
+            names.append(p.name)
+        elif p.kind == p.POSITIONAL_ONLY:
+            names.append(None)
+        else:
+            break
+    return names
+
+
+class TraceBindingError(TypeError):
+    """A call shape the tracer cannot replay through stage functions."""
 
 
 class _TraceContext:
@@ -115,9 +146,42 @@ class _TraceContext:
         self.t0 = time.perf_counter()
 
     def call(self, entry: ModuleEntry, *args: Any, **kwargs: Any):
-        arr_in = [a for a in args if _is_array(a)]
-        params = {k: v for k, v in kwargs.items() if not _is_array(v)}
-        arr_in += [v for v in kwargs.values() if _is_array(v)]
+        # Record every array operand together with HOW it was bound, so the
+        # stage fns can replay the exact call.  Positional arrays stay
+        # positional (in original relative order); keyword arrays keep their
+        # keyword; non-array positionals fold into params by parameter name —
+        # and once one does, every later positional must be rebound by name
+        # too (the positional prefix seen at replay is shorter than at trace).
+        arr_in: list[Any] = []
+        in_kw: list[str | None] = []
+        params: dict[str, Any] = {}
+        pos_names = _positional_param_names(entry.software)
+
+        def name_of(i: int) -> str:
+            if pos_names is None or i >= len(pos_names) or pos_names[i] is None:
+                raise TraceBindingError(
+                    f"{entry.name!r}: positional argument {i} cannot be "
+                    f"rebound by keyword for replay (no inspectable name); "
+                    f"pass it by keyword or simplify the call")
+            return pos_names[i]
+
+        shifted = False
+        for i, a in enumerate(args):
+            if _is_array(a):
+                if shifted:
+                    in_kw.append(name_of(i))
+                else:
+                    in_kw.append(None)
+                arr_in.append(a)
+            else:
+                params[name_of(i)] = a
+                shifted = True
+        for k, v in kwargs.items():
+            if _is_array(v):
+                arr_in.append(v)
+                in_kw.append(k)
+            else:
+                params[k] = v
         t_start = time.perf_counter() - self.t0
         t = time.perf_counter()
         out = entry.software(*args, **kwargs)
@@ -134,6 +198,7 @@ class _TraceContext:
             out_ids=[id(a) for a in arr_out],
             in_meta=[(tuple(a.shape), str(a.dtype)) for a in arr_in],
             out_meta=[(tuple(a.shape), str(a.dtype)) for a in arr_out],
+            in_kw=in_kw, in_arrays=list(arr_in),
             params=params,
             time_ms=dt, t_start=t_start, t_end=t_end))
         return out
@@ -153,27 +218,33 @@ class Frontend:
             out = fn(*args, **kwargs)
         finally:
             _state.stack.pop()
-        ir = self._build_ir(ctx, args, out, name or getattr(fn, "__name__", "trace"))
+        ir = self._build_ir(ctx, args, kwargs, out,
+                            name or getattr(fn, "__name__", "trace"))
         return ir, out
 
     # -- Step 3: causal graph reconstruction --------------------------------- #
-    def _build_ir(self, ctx: _TraceContext, args: Any, out: Any,
+    def _build_ir(self, ctx: _TraceContext, args: Any, kwargs: Any, out: Any,
                   name: str) -> CourierIR:
         ir = CourierIR(name)
         id2val: dict[int, str] = {}
         counter = [0]
 
-        def val_for(aid: int, meta: tuple, producer: str | None) -> str:
-            if aid in id2val:
-                return id2val[aid]
+        def fresh(meta: tuple, producer: str | None) -> str:
             vname = f"d{counter[0]}"
             counter[0] += 1
             ir.add_value(vname, meta[0], meta[1], producer=producer)
+            return vname
+
+        def val_for(aid: int, meta: tuple, producer: str | None) -> str:
+            if aid in id2val:
+                return id2val[aid]
+            vname = fresh(meta, producer)
             id2val[aid] = vname
             return vname
 
-        # graph inputs first (paper: data nodes of the running binary)
-        flat_args = [a for a in jax.tree.leaves(args) if _is_array(a)]
+        # graph inputs first (paper: data nodes of the running binary) —
+        # every array leaf of the call, positional AND keyword
+        flat_args = [a for a in jax.tree.leaves((args, kwargs)) if _is_array(a)]
         for a in flat_args:
             vn = val_for(id(a), (tuple(a.shape), str(a.dtype)), None)
             if vn not in ir.graph_inputs:
@@ -184,17 +255,49 @@ class Frontend:
             idx = per_key.get(r.fn_key, 0)
             per_key[r.fn_key] = idx + 1
             nname = f"{r.fn_key}_{idx}"
-            ins = [val_for(i, m, None) for i, m in zip(r.in_ids, r.in_meta)]
-            outs = [val_for(o, m, nname) for o, m in zip(r.out_ids, r.out_meta)]
+            ins: list[str] = []
+            for aid, m, arr in zip(r.in_ids, r.in_meta, r.in_arrays):
+                first_seen = aid not in id2val
+                vn = val_for(aid, m, None)
+                if first_seen:
+                    # first sighting mid-trace: a closure-captured operand
+                    # (model weight/constant), not a top-level argument.  The
+                    # executor must still be able to feed it, so it becomes a
+                    # graph input whose array is retained for staging.
+                    ir.graph_inputs.append(vn)
+                    ir.captured[vn] = arr
+                ins.append(vn)
+            outs: list[str] = []
+            for o, m in zip(r.out_ids, r.out_meta):
+                if o in id2val:
+                    # aliasing: the fn returned an operand unchanged.  Reusing
+                    # the value would make this node both consumer and
+                    # producer of one id (and stomp the original producer) —
+                    # mint a fresh value (an identity edge) and repoint later
+                    # consumers of this array at the alias.
+                    vn = fresh(m, nname)
+                    id2val[o] = vn
+                    outs.append(vn)
+                else:
+                    outs.append(val_for(o, m, nname))
             ir.add_node(Node(name=nname, fn_key=r.fn_key, inputs=ins,
-                             outputs=outs, params=r.params,
+                             outputs=outs, input_kw=list(r.in_kw),
+                             params=r.params,
                              time_ms=r.time_ms if ctx.profile else None,
                              t_start=r.t_start, t_end=r.t_end))
 
         flat_out = [a for a in jax.tree.leaves(out) if _is_array(a)]
         for a in flat_out:
-            if id(a) in id2val:
-                ir.graph_outputs.append(id2val[id(a)])
+            aid = id(a)
+            if aid not in id2val:
+                # returned array no library call ever saw (constant, or a
+                # passthrough of something outside the traced args): register
+                # it as a captured graph input instead of silently emitting a
+                # truncated graph_outputs list
+                vn = val_for(aid, (tuple(a.shape), str(a.dtype)), None)
+                ir.graph_inputs.append(vn)
+                ir.captured[vn] = a
+            ir.graph_outputs.append(id2val[aid])
         ir.validate()
         return ir
 

@@ -491,6 +491,78 @@ def serve_pipeline_demo(n_requests: int = 64, max_batch: int = 8,
     return srv.stats()
 
 
+def serve_traced_transformer_demo(n_requests: int = 24, max_batch: int = 4,
+                                  max_wait_ms: float = 4.0,
+                                  seq_len: int = 32, d: int = 64,
+                                  n_layers: int = 2, ff: int = 128,
+                                  n_heads: int = 4, vocab: int = 128,
+                                  worker_budget: "int | str | None" = None,
+                                  devices: int | None = None) -> dict:
+    """The general trace→serve path: a transformer forward pass traced by
+    the Frontend (weights closed over, no model-code edits), lowered
+    through partition→fusion→replication→verify, served behind the
+    request queue.
+
+    Each request is one ``[seq_len, d]`` embedding sequence.  Returns the
+    server stats plus trace-path facts: the fused nodes (the registered
+    rmsnorm+matmul mega-kernel must fire on the traced graph), the number
+    of captured weight inputs, and ``results_match`` — served results
+    compared bit-exactly against ``jax.jit`` of the untraced model.
+    """
+    from repro.core import DeviceInventory, PipelineGenerator
+    from repro.core.partition import widen_for_deployment
+    from repro.core.tracer import Frontend, Library
+    from repro.models.zoo import (init_transformer_params, make_zoo_db,
+                                  transformer_demo)
+
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    db = make_zoo_db()
+    lib = Library(db)
+    params = init_transformer_params(jax.random.PRNGKey(0), n_layers=n_layers,
+                                     d=d, ff=ff, n_heads=n_heads, vocab=vocab)
+    app = transformer_demo(lib, params)
+    seqs = [jax.random.normal(jax.random.PRNGKey(100 + i), (seq_len, d),
+                              jnp.float32) for i in range(n_requests)]
+
+    ir, _ = Frontend(db).trace(app, seqs[0])
+    pipe = PipelineGenerator(db).generate(ir, policy="optimal", fuse=True,
+                                          max_stages=4)
+    inventory = DeviceInventory.detect(limit=devices) if devices else None
+    plan = pipe.plan
+    replicas, stage_devices = widen_for_deployment(
+        plan, pipe.ir, worker_budget=worker_budget, inventory=inventory)
+    if replicas is not None:
+        max_batch, max_wait_ms = replication_aware_batching(
+            plan, max_batch=max_batch, max_wait_ms=max_wait_ms)
+    ex = pipe.executor(microbatch=max_batch, pad_microbatches=True,
+                       replicas=replicas, devices=stage_devices,
+                       inventory=inventory)
+    ex.warmup(seqs[0])
+
+    with RequestQueueServer(ex, max_batch=max_batch,
+                            max_wait_ms=max_wait_ms) as srv:
+        reqs = [srv.submit(s) for s in seqs]
+        results = [r.wait(timeout=120.0) for r in reqs]
+
+    # bit-exact parity with the untraced model (jax.jit of the very same
+    # user function, weights still in its closure)
+    ref = jax.jit(app)
+    match = all(bool(jnp.array_equal(y, ref(s)))
+                for y, s in zip(results, seqs))
+    stats = srv.stats()
+    stats.update({
+        "results_match": match,
+        "n_nodes": len(pipe.ir.nodes),
+        "n_stages": plan.n_stages,
+        "fused_nodes": [n.name for n in pipe.ir.nodes if n.fused_from],
+        "captured_inputs": len(pipe.captured),
+        "token_inputs": len(pipe.graph_inputs),
+        "replicas": list(replicas) if replicas is not None else None,
+    })
+    return stats
+
+
 def _budget_arg(v: str):
     """argparse type for --worker-budget: an int or the 'auto' sentinel,
     rejected with a clean argparse error instead of an int() traceback."""
@@ -507,7 +579,8 @@ def _budget_arg(v: str):
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["lm", "pipeline"], default="lm")
+    ap.add_argument("--mode", choices=["lm", "pipeline", "trace"],
+                    default="lm")
     ap.add_argument("--arch", choices=ARCH_IDS, default="gemma3-12b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4)
@@ -526,6 +599,22 @@ def main() -> None:
                          "devices (jax.devices()); each replica of a "
                          "widened stage is pinned to its own device")
     args = ap.parse_args()
+
+    if args.mode == "trace":
+        stats = serve_traced_transformer_demo(
+            n_requests=args.requests, max_batch=args.max_batch,
+            max_wait_ms=args.max_wait_ms, worker_budget=args.worker_budget,
+            devices=args.devices)
+        lat = stats["latency_ms"]
+        print(f"[serve] traced transformer: {stats['requests_served']} "
+              f"requests over {stats['n_stages']} stages "
+              f"(fused: {stats['fused_nodes']}, "
+              f"{stats['captured_inputs']} captured weights)")
+        print(f"[serve] results match untraced model: "
+              f"{stats['results_match']}")
+        print(f"[serve] latency ms: mean={lat['mean']:.2f} "
+              f"p50={lat['p50']:.2f} p95={lat['p95']:.2f} max={lat['max']:.2f}")
+        return
 
     if args.mode == "pipeline":
         stats = serve_pipeline_demo(n_requests=args.requests,

@@ -191,7 +191,11 @@ class ElasticPlanner:
         assign_placements(self.layer_ir, self.db)
         fns = make_stage_fns(self.layer_ir, self.db, plan, jit=jit,
                              cache=self._stagefn_cache)
-        return PipelineExecutor(fns, self.layer_ir.graph_inputs,
+        # captured graph inputs (traced closure weights) are baked into the
+        # stage fns — the executor only sees the per-token inputs
+        cap = getattr(self.layer_ir, "captured", {})
+        token_inputs = [g for g in self.layer_ir.graph_inputs if g not in cap]
+        return PipelineExecutor(fns, token_inputs,
                                 self.layer_ir.graph_outputs,
                                 max_in_flight=max_in_flight,
                                 microbatch=microbatch, profiler=profiler,

@@ -45,6 +45,19 @@ SCHEMA = {
         },
         "roofline": {"traffic_reduction": NUM, "hbm_bytes_saved": NUM},
     },
+    "trace": {
+        "transformer": {
+            "n_nodes": int, "n_stages": int, "fused_nodes": list,
+            "captured_inputs": int, "token_inputs": int,
+            "tps_sequential": NUM, "tps_async": NUM, "speedup": NUM,
+            "results_match": bool,
+        },
+        "recurrent": {"n_nodes": int, "results_match": bool},
+        "serving": {
+            "requests": int, "latency_p95_ms": NUM, "results_match": bool,
+            "fused_nodes": list, "captured_inputs": int,
+        },
+    },
     "replan": {
         "sim": {
             "tps_before_slowdown": NUM, "tps_static": NUM,
@@ -157,6 +170,18 @@ def test_committed_bench_json_matches_schema():
     assert data["replicate"]["hot_swap"]["out_of_order"] == 0
     assert data["replicate"]["hot_swap"]["recompiles_after_warmup"] == 0
     assert data["tokens_per_sec"]["sequential"] > 0
+    # trace-to-pipeline acceptance (ISSUE 8): the async traced pipeline
+    # >= 1.5x sequential tokens/s, bit-exact vs the untraced model, the
+    # registered mega-kernel fired on the traced graph, and closure
+    # weights were captured (one per-token input remains)
+    trc = data["trace"]
+    assert trc["transformer"]["speedup"] >= 1.5
+    assert trc["transformer"]["results_match"] is True
+    assert trc["transformer"]["fused_nodes"]
+    assert trc["transformer"]["captured_inputs"] >= 1
+    assert trc["transformer"]["token_inputs"] == 1
+    assert trc["recurrent"]["results_match"] is True
+    assert trc["serving"]["results_match"] is True
     # multi-device placement acceptance: each replica of the widened stage
     # on its own device, >= 1.5x over serial, zero drops across the swap
     dev = data["devices"]
