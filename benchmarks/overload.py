@@ -1,0 +1,363 @@
+"""Overload benchmark — open-loop Poisson load against the serving layer.
+
+Closed-loop load generators (submit, wait, submit) hide queueing collapse:
+the generator slows down with the server, so offered load silently tracks
+capacity and the queue never grows.  This benchmark is **open-loop**: a
+submitter thread fires requests on a pre-drawn Poisson schedule regardless
+of completions (the admission controller guarantees ``submit`` never
+blocks), which is the only load shape that exposes what a serving system
+does when offered load exceeds capacity.
+
+Two scenarios feed the ``overload`` section of ``BENCH_pipeline.json``:
+
+1. **sweep** — a sleep-backed chain served at 0.7x / 1.0x / 2.0x of its
+   measured closed-loop capacity with a 30/30/40 interactive/batch/
+   best-effort mix.  Interactive and batch carry deadlines (tight and
+   loose); best-effort carries none and is the degradation ladder's first
+   casualty.  Acceptance at 2.0x: interactive goodput >= 0.9x its offered
+   load (shedding lands on best-effort/batch), interactive p99 within its
+   deadline SLO, and the accounting invariant — submitted == served +
+   shed + expired + failed, every request resolved (nothing blocked
+   forever).
+2. **chaos** — 2.0x overload composed with the fault harness: seeded
+   random transients on the widened stage (post-warmup via
+   ``random_transients(from_call=)``), a live mid-run device loss
+   (quarantine -> inventory refresh -> survivors re-plan -> zero-downtime
+   ``swap_executor``), still under admission control.  Acceptance: zero
+   unaccounted requests and zero out-of-order retirements through all of
+   it.
+
+``poisson_schedule`` is a pure function of its seed (bulk draws from
+``np.random.default_rng``), so the offered traffic reproduces bit-exactly
+— the determinism test in ``tests/test_overload.py`` relies on this.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.simchain import make_planner, tps as _tps
+
+STAGE_MS = [1.0, 3.0, 1.0]            # serial sweep chain
+CHAOS_STAGE_MS = [2.0, 8.0]           # dominant 2nd stage gets the widening
+RATES = (0.7, 1.0, 2.0)               # offered load as a fraction of capacity
+MIX = (0.3, 0.3, 0.4)                 # interactive / batch / best-effort
+INTERACTIVE_DEADLINE_MS = 100.0
+BATCH_DEADLINE_MS = 450.0
+DEADLINES = (INTERACTIVE_DEADLINE_MS, BATCH_DEADLINE_MS, None)
+GOODPUT_FLOOR = 0.9                   # interactive served/offered at 2.0x
+
+
+def poisson_schedule(rate_rps: float, duration_s: float, seed: int,
+                     mix=MIX) -> tuple[np.ndarray, np.ndarray]:
+    """Seeded open-loop schedule: (arrival times s, priority classes).
+
+    Pure function of ``(rate_rps, duration_s, seed, mix)`` — exponential
+    interarrivals and class draws come from one ``default_rng(seed)``
+    stream in a fixed order, so the same seed reproduces the same traffic
+    bit-exactly on any machine.
+    """
+    if rate_rps <= 0 or duration_s <= 0:
+        raise ValueError("rate_rps and duration_s must be > 0")
+    rng = np.random.default_rng(seed)
+    times: list[float] = []
+    t = 0.0
+    while True:
+        # bulk draws keep the rng call sequence deterministic AND fast
+        chunk = rng.exponential(1.0 / rate_rps, size=256)
+        for dt in chunk:
+            t += dt
+            if t >= duration_s:
+                break
+            times.append(t)
+        if t >= duration_s:
+            break
+    arrivals = np.asarray(times, dtype=np.float64)
+    edges = np.cumsum(np.asarray(mix, dtype=np.float64))
+    classes = np.searchsorted(edges, rng.random(len(arrivals)),
+                              side="right").astype(np.int64)
+    classes = np.minimum(classes, len(mix) - 1)
+    return arrivals, classes
+
+
+def _measure_capacity(ex, n_tokens: int = 48) -> float:
+    """Closed-loop requests-per-second of the executor (the 1.0x anchor)."""
+    toks = [np.full((8,), float(i)) for i in range(n_tokens)]
+    return _tps(ex, toks)
+
+
+def _drive_open_loop(srv, arrivals: np.ndarray, classes: np.ndarray,
+                     deadlines=DEADLINES) -> list:
+    """Submit on the absolute-time schedule; returns the Request list.
+
+    Runs on the caller's thread; with an admission controller attached
+    ``submit`` never blocks, so the schedule is honored even when the
+    server is drowning (the definition of open-loop).
+    """
+    tok = np.full((8,), 1.0)
+    t0 = time.perf_counter()
+    reqs = []
+    for t_rel, cls in zip(arrivals, classes):
+        delay = t0 + float(t_rel) - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        reqs.append(srv.submit(tok, deadline_ms=deadlines[int(cls)],
+                               priority=int(cls)))
+    return reqs
+
+
+def _settle(reqs, timeout_s: float = 60.0) -> int:
+    """Wait for every request to resolve; count the unresolved stragglers
+    (must be zero: 'no request blocked forever' is the invariant)."""
+    from repro.launch.serve import WaitTimeout
+
+    deadline = time.perf_counter() + timeout_s
+    unresolved = 0
+    for r in reqs:
+        try:
+            r.wait(timeout=max(deadline - time.perf_counter(), 0.001))
+        except WaitTimeout:
+            unresolved += 1
+        except Exception:
+            pass                      # shed/expired/failed: resolved
+    return unresolved
+
+
+def _class_summary(stats: dict) -> dict:
+    out = {}
+    for name, entry in stats["classes"].items():
+        sub = entry["submitted"]
+        lat = entry["latency_ms"]
+        out[name] = {
+            "submitted": int(sub),
+            "served": int(entry["served"]),
+            "shed": int(entry["shed"]),
+            "expired": int(entry["expired"]),
+            "failed": int(entry["failed"]),
+            "goodput": round(entry["served"] / sub, 4) if sub else 1.0,
+            "p50_ms": round(lat["p50"], 3),
+            "p99_ms": round(lat["p99"], 3),
+            "p999_ms": round(lat["p999"], 3),
+        }
+    return out
+
+
+def _accounted(stats: dict) -> bool:
+    total = (stats["requests_served"] + stats["shed"] + stats["expired"]
+             + stats["failed"])
+    return total == stats["submitted"]
+
+
+def sweep(smoke: bool = False, seed: int = 7) -> dict:
+    """Serve the same pipeline at 0.7x/1.0x/2.0x measured capacity."""
+    from repro.core import StageProfiler
+    from repro.launch.serve import AdmissionController, RequestQueueServer
+
+    duration_s = 0.8 if smoke else 2.5
+    n_stages = len(STAGE_MS)
+    planner = make_planner("overload-sweep", STAGE_MS)
+    prof = StageProfiler(n_stages, min_samples=2)
+    ex, _ = planner.executor_for(n_stages, jit=False, profiler=prof)
+    plan = planner.current_plan
+    capacity_rps = _measure_capacity(ex)
+
+    out: dict = {
+        "capacity_rps": round(capacity_rps, 2),
+        "period_ms": round(float(plan.effective_bottleneck_ms), 3),
+        "duration_s": duration_s,
+        "mix": list(MIX),
+        "deadline_ms": {"interactive": INTERACTIVE_DEADLINE_MS,
+                        "batch": BATCH_DEADLINE_MS},
+        "sweep": {},
+    }
+    for i, rate in enumerate(RATES):
+        offered = rate * capacity_rps
+        arrivals, classes = poisson_schedule(offered, duration_s, seed + i)
+        # batch_hint=1: this executor serves microbatch=1, so the pipeline
+        # retires ONE token per effective period — a dispatch group is a
+        # single token for admission's wait prediction
+        adm = AdmissionController.from_plan(
+            plan, max_batch=1, slo_ref_ms=BATCH_DEADLINE_MS)
+        # max_batch=4 on a pool-4 executor: one flush of a lower class
+        # never occupies more than ~4 service periods before interactive
+        # work can preempt again
+        with RequestQueueServer(ex, max_batch=4, max_wait_ms=2.0,
+                                queue_depth=256, admission=adm) as srv:
+            reqs = _drive_open_loop(srv, arrivals, classes)
+            unresolved = _settle(reqs)
+        stats = srv.stats()
+        by_class = _class_summary(stats)
+        entry = {
+            "offered_rps": round(offered, 2),
+            "submitted": int(stats["submitted"]),
+            "served": int(stats["requests_served"]),
+            "shed": int(stats["shed"]),
+            "expired": int(stats["expired"]),
+            "failed": int(stats["failed"]),
+            "unresolved": int(unresolved),
+            "accounted": bool(_accounted(stats) and unresolved == 0),
+            "slo_violation_rate": round(stats["slo_violation_rate"], 4),
+            "interactive": by_class["interactive"],
+            "batch": by_class["batch"],
+            "best_effort": by_class["best_effort"],
+        }
+        out["sweep"][f"{rate:g}x"] = entry
+        assert entry["accounted"], \
+            f"{rate:g}x: {entry['submitted']} submitted != " \
+            f"{entry['served']} served + {entry['shed']} shed + " \
+            f"{entry['expired']} expired + {entry['failed']} failed " \
+            f"({entry['unresolved']} unresolved)"
+    ex.close()
+
+    hot = out["sweep"]["2x"]
+    ia = hot["interactive"]
+    assert ia["goodput"] >= GOODPUT_FLOOR, \
+        f"2x overload: interactive goodput {ia['goodput']:.3f} below " \
+        f"{GOODPUT_FLOOR} ({ia['served']}/{ia['submitted']})"
+    assert ia["p99_ms"] <= INTERACTIVE_DEADLINE_MS, \
+        f"2x overload: interactive p99 {ia['p99_ms']:.1f} ms breaks the " \
+        f"{INTERACTIVE_DEADLINE_MS:g} ms deadline SLO"
+    # shedding must land on the no-deadline class first, not interactive
+    assert hot["best_effort"]["shed"] >= ia["shed"], \
+        "2x overload shed more interactive than best-effort traffic"
+    return out
+
+
+def chaos(smoke: bool = False, seed: int = 11) -> dict:
+    """2.0x overload + random transients + a live device loss, end to end."""
+    from repro.core import DeviceInventory, StageProfiler
+    from repro.launch.serve import AdmissionController, RequestQueueServer
+    from repro.runtime.faults import FaultInjector
+
+    duration_s = 1.5 if smoke else 4.0
+    n_stages = len(CHAOS_STAGE_MS)
+    inv = DeviceInventory.host(4)
+    inj = FaultInjector()             # faults scripted live, post-warmup
+    planner = make_planner("overload-chaos", CHAOS_STAGE_MS, inventory=inv,
+                           fault_injector=inj, quarantine_after=3)
+    prof = StageProfiler(n_stages, min_samples=2)
+    ex, _ = planner.executor_for(n_stages, jit=False, profiler=prof)
+    plan = planner.current_plan
+    wide_si = max(range(n_stages), key=lambda s: ex.replicas[s])
+    target = ex.devices[wide_si][0]
+    capacity_rps = _measure_capacity(ex)
+
+    # transients start AFTER the capacity run's calls: the calibration
+    # anchor stays fault-free, the serving phase gets the full rate
+    inj.plan.random_transients(0.02, seed=seed, stages=[wide_si],
+                               from_call=inj.stage_calls(wide_si))
+
+    offered = 2.0 * capacity_rps
+    arrivals, classes = poisson_schedule(offered, duration_s, seed)
+    adm = AdmissionController.from_plan(
+        plan, max_batch=1, slo_ref_ms=BATCH_DEADLINE_MS)
+    old_ex = None
+    decision = None
+    with RequestQueueServer(ex, max_batch=4, max_wait_ms=2.0,
+                            queue_depth=256, admission=adm) as srv:
+        box: dict = {}
+
+        def _driver():
+            box["reqs"] = _drive_open_loop(srv, arrivals, classes)
+
+        sub = threading.Thread(target=_driver, daemon=True)
+        sub.start()
+        # mid-run: pull one of the wide stage's devices out from under the
+        # serving loop, then recover elastically while overloaded
+        time.sleep(0.35 * duration_s)
+        inj.lose_device(target)
+        time.sleep(0.25 * duration_s)
+        diff = inv.refresh(probe=lambda: inj.surviving(inv))
+        decision = planner.replan_on_inventory_change(
+            diff, profiler=prof, stats=ex.stats(), jit=False)
+        if decision.replanned and decision.executor is not None:
+            old_ex = srv.swap_executor(decision.executor,
+                                       warm_args=(np.full((8,), 1.0),))
+        sub.join()
+        unresolved = _settle(box["reqs"])
+    stats = srv.stats()
+    exec_stats = [ex.stats()] + ([decision.executor.stats()]
+                                 if old_ex is not None else [])
+    ooo = sum(s.out_of_order_retired for s in exec_stats)
+    retries = sum(s.retries for s in exec_stats)
+    quarantined = sum(s.quarantined for s in exec_stats)
+    ex.close()
+    if old_ex is not None:
+        decision.executor.close()
+
+    out = {
+        "offered_rps": round(offered, 2),
+        "capacity_rps": round(capacity_rps, 2),
+        "duration_s": duration_s,
+        "submitted": int(stats["submitted"]),
+        "served": int(stats["requests_served"]),
+        "shed": int(stats["shed"]),
+        "expired": int(stats["expired"]),
+        "failed": int(stats["failed"]),
+        "unresolved": int(unresolved),
+        "accounted": bool(_accounted(stats) and unresolved == 0),
+        "out_of_order": int(ooo),
+        "retries": int(retries),
+        "quarantined": int(quarantined),
+        "errors_injected": int(inj.injected),
+        "lost_device": int(target),
+        "replanned": bool(decision is not None and decision.replanned),
+        "swaps": int(srv.swaps),
+        "interactive_goodput": round(
+            stats["classes"]["interactive"]["served"]
+            / max(stats["classes"]["interactive"]["submitted"], 1), 4),
+    }
+    assert out["accounted"], \
+        f"chaos: {out['submitted']} submitted != {out['served']} served + " \
+        f"{out['shed']} shed + {out['expired']} expired + " \
+        f"{out['failed']} failed ({out['unresolved']} unresolved)"
+    assert out["out_of_order"] == 0, \
+        f"chaos: {out['out_of_order']} out-of-order retirements"
+    assert out["errors_injected"] >= 1, "chaos injected no faults"
+    assert out["replanned"], "device loss did not trigger a re-plan"
+    return out
+
+
+_payload_cache: dict = {}
+
+
+def payload(smoke: bool = False) -> dict:
+    key = bool(smoke)
+    if key not in _payload_cache:
+        s = sweep(smoke=smoke)
+        s["chaos"] = chaos(smoke=smoke)
+        _payload_cache[key] = s
+    return _payload_cache[key]
+
+
+def run(smoke: bool = False) -> list:
+    p = payload(smoke=smoke)
+    hot, ch = p["sweep"]["2x"], p["chaos"]
+    rows = []
+    for rate, entry in p["sweep"].items():
+        ia = entry["interactive"]
+        rows.append((
+            f"overload.{rate}.interactive_goodput", ia["goodput"],
+            f"{ia['served']}/{ia['submitted']} served; p99 "
+            f"{ia['p99_ms']} ms vs {INTERACTIVE_DEADLINE_MS:g} ms deadline"))
+        rows.append((
+            f"overload.{rate}.shed", entry["shed"],
+            f"{entry['submitted']} submitted at {entry['offered_rps']} rps; "
+            f"{entry['expired']} expired; accounted {entry['accounted']}"))
+    rows.append((
+        "overload.chaos.unaccounted",
+        ch["submitted"] - ch["served"] - ch["shed"] - ch["expired"]
+        - ch["failed"],
+        f"{ch['errors_injected']} faults injected; device {ch['lost_device']}"
+        f" lost; {ch['retries']} retries; {ch['quarantined']} quarantined; "
+        f"{ch['out_of_order']} out-of-order"))
+    assert hot["interactive"]["goodput"] >= GOODPUT_FLOOR
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(smoke="--smoke" in sys.argv[1:]):
+        print(",".join(str(x) for x in r))

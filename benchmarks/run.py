@@ -34,7 +34,7 @@ def _emit(mod) -> None:
 
 def main() -> None:
     from benchmarks import (analysis, devices, faults, fig4_callgraph,
-                            fusion, replan, replicate, roofline,
+                            fusion, overload, replan, replicate, roofline,
                             table1_pipeline, table2_modules,
                             table3_resources, trace_pipeline)
 
@@ -100,6 +100,20 @@ def main() -> None:
                   f"{t['captured_inputs']} captured weights; recurrent "
                   f"{int(trc['recurrent']['results_match'])}; serving "
                   f"{int(trc['serving']['results_match'])}")
+            ovl = overload.payload(smoke=True)  # asserts goodput + accounting
+            hot, ch = ovl["sweep"]["2x"], ovl["chaos"]
+            print(f"smoke.overload.goodput,"
+                  f"{hot['interactive']['goodput']},"
+                  f"interactive {hot['interactive']['served']}/"
+                  f"{hot['interactive']['submitted']} at 2x capacity; p99 "
+                  f"{hot['interactive']['p99_ms']} ms vs "
+                  f"{ovl['deadline_ms']['interactive']} ms deadline")
+            print(f"smoke.overload.chaos,"
+                  f"{int(not ch['accounted'])},"
+                  f"{ch['served']} served; {ch['shed']} shed; "
+                  f"{ch['expired']} expired; {ch['failed']} failed of "
+                  f"{ch['submitted']}; {ch['out_of_order']} out-of-order; "
+                  f"{ch['errors_injected']} faults")
             path = table1_pipeline.write_bench_json(smoke=True)
             print(f"smoke.bench_json,0,{path}")
         except Exception as e:
@@ -108,12 +122,12 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
             sys.exit(1)
         return
-    # replan/replicate/devices/faults last: their thread pools, serving
-    # loops, and subprocesses are the noisiest neighbors for the wall-clock
-    # benchmarks that precede them
+    # replan/replicate/devices/faults/overload last: their thread pools,
+    # serving loops, and open-loop load generators are the noisiest
+    # neighbors for the wall-clock benchmarks that precede them
     for mod in (table1_pipeline, table2_modules, table3_resources,
                 fig4_callgraph, fusion, roofline, analysis, trace_pipeline,
-                replan, replicate, devices, faults):
+                replan, replicate, devices, faults, overload):
         _emit(mod)
     try:
         path = table1_pipeline.write_bench_json()

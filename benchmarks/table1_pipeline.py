@@ -177,8 +177,8 @@ def bench_payload(smoke: bool = False) -> dict:
     """sequential / wavefront / async / fused tokens-per-sec + bottleneck ms,
     plus the fusion, adaptive-replan, and stage-replication benchmarks —
     the perf trajectory tracked across PRs."""
-    from benchmarks import (devices, faults, fusion, replan, replicate,
-                            trace_pipeline)
+    from benchmarks import (devices, faults, fusion, overload, replan,
+                            replicate, trace_pipeline)
 
     n_frames = 2 if smoke else 12
     size = (64, 96) if smoke else (270, 480)
@@ -192,7 +192,8 @@ def bench_payload(smoke: bool = False) -> dict:
     rep = replan.payload(smoke=smoke)
     wide = replicate.payload(smoke=smoke)
     dev = devices.payload(smoke=smoke)
-    flt = faults.payload(smoke=smoke)    # last: fault churn + serving loops
+    flt = faults.payload(smoke=smoke)    # fault churn + serving loops
+    ovl = overload.payload(smoke=smoke)  # last: open-loop load saturation
     return {
         "bench": "table1_pipeline", "smoke": bool(smoke),
         "shape": m["shape"], "n_frames": m["n_frames"],
@@ -217,6 +218,7 @@ def bench_payload(smoke: bool = False) -> dict:
         "replicate": wide,
         "devices": dev,
         "faults": flt,
+        "overload": ovl,
     }
 
 

@@ -167,6 +167,7 @@ class ExecutorStats:
     occupancy_sum: int = 0
     wall_ms: float = 0.0           # accumulated blocking run() wall time
     out_of_order_retired: int = 0  # groups retired out of submission order
+    tokens_failed: int = 0         # tokens retired carrying an error
     retries: int = 0               # failed stage calls re-executed
     quarantined: int = 0           # replicas evicted after repeated errors
     # failed stage calls per CONFIGURED device ordinal — the replanner's
@@ -194,6 +195,7 @@ class ExecutorStats:
             "groups_admitted": self.groups_admitted,
             "max_in_flight_seen": self.max_in_flight_seen,
             "out_of_order_retired": self.out_of_order_retired,
+            "tokens_failed": self.tokens_failed,
             "retries": self.retries,
             "quarantined": self.quarantined,
             "device_errors": {str(k): v
@@ -1222,6 +1224,8 @@ class PipelineExecutor:
         with self._lock:
             if finalized_here:           # exactly-once accounting per group
                 self._stats.tokens_retired += g.size
+                if g.error is not None:
+                    self._stats.tokens_failed += g.size
                 self._occupancy -= g.size
                 if g.seq is not None:
                     # reorder-buffer audit: retirement must consume seqs

@@ -224,6 +224,29 @@ class StageProfiler:
         return all(self._count[k] >= self.min_samples
                    for k in range(self.n_stages))
 
+    def effective_period_ms(self, replicas: "Sequence[int] | None" = None,
+                            ) -> float | None:
+        """Measured steady-state token period of the running pipeline.
+
+        The replication-aware bottleneck
+        (:func:`~repro.core.costmodel.replicated_bottleneck_ms`) over the
+        per-stage window **medians** — the measured analog of
+        ``plan.effective_bottleneck_ms``, and the service-period input to
+        the serving layer's admission controller (predicted queue wait =
+        dispatch groups ahead x this period).  ``None`` until every stage
+        has ``min_samples`` measurements, so admission keeps using the
+        plan's model until the profile can stand on its own.
+        """
+        from .costmodel import replicated_bottleneck_ms
+
+        meds = [self.measured_ms(k) for k in range(self.n_stages)]
+        if any(m is None for m in meds):
+            return None
+        reps = list(replicas) if replicas is not None else [1] * self.n_stages
+        if len(reps) != self.n_stages:
+            return None
+        return replicated_bottleneck_ms(meds, reps)
+
     def snapshot(self) -> dict:
         """Machine-readable per-stage profile (for stats endpoints)."""
         stages = []

@@ -272,7 +272,10 @@ class ElasticPlanner:
                             min_samples: int | None = None,
                             revisit_fusion: bool = True,
                             worker_budget: "int | str | None" = None,
-                            new_profiler: Any = None) -> ReplanDecision:
+                            new_profiler: Any = None,
+                            slo_violation_rate: float | None = None,
+                            slo_replan_threshold: float = 0.05,
+                            ) -> ReplanDecision:
         """Profile-guided re-plan check: measured costs -> maybe new executor.
 
         The decision rule (documented in EXPERIMENTS.md):
@@ -304,6 +307,17 @@ class ElasticPlanner:
            medians + this threshold are what prevent plan flapping under
            noisy timings.
 
+        **SLO pressure** — when the serving layer reports
+        ``slo_violation_rate`` (fraction of completed requests that
+        missed their deadline, see
+        :meth:`~repro.launch.serve.RequestQueueServer.slo_violation_rate`)
+        at or above ``slo_replan_threshold``, the hysteresis gate is
+        waived (``min_gain`` treated as 1.0): requests are already
+        failing their deadlines, so *any* predicted improvement is worth
+        a zero-drop hot-swap — stage medians alone can look healthy
+        while queueing delay destroys the SLO.  The plan-identity check
+        still applies (an unchanged plan is never rebuilt).
+
         The new executor shares the planner's StageFn cache, so stages with
         unchanged boundaries keep their compiled executables (bounded
         recompiles during the serving layer's hot-swap).
@@ -319,6 +333,12 @@ class ElasticPlanner:
             raise ValueError("no current plan: call executor_for() before "
                              "replan_from_profile()")
         min_gain = self.min_gain if min_gain is None else float(min_gain)
+        slo_pressure = (slo_violation_rate is not None
+                        and slo_violation_rate >= slo_replan_threshold)
+        if slo_pressure:
+            # deadlines are already being missed: any predicted gain
+            # justifies a (zero-drop) swap, so hysteresis is waived
+            min_gain = min(min_gain, 1.0)
         margin = self.margin if margin is None else float(margin)
         min_samples = self.min_samples if min_samples is None \
             else int(min_samples)
@@ -472,10 +492,13 @@ class ElasticPlanner:
         self._current_plan = chosen
         self.rebuilds += 1
         self.replans += 1
+        reason = ("measured costs widened the bottleneck stage" if widened
+                  else "measured costs re-balanced the plan")
+        if slo_pressure:
+            reason += (f" (SLO pressure: {slo_violation_rate:.1%} violation "
+                       "rate waived hysteresis)")
         d = ReplanDecision(
-            True,
-            "measured costs widened the bottleneck stage" if widened
-            else "measured costs re-balanced the plan",
+            True, reason,
             old_bottleneck, new_bottleneck, gain,
             defused, chosen, ex, widened=widened,
             replicas=list(chosen.replicas))

@@ -75,7 +75,8 @@ class FaultPlan:
         self.slowdowns: list[tuple[int, float, int, int | None]] = []
         self.device_losses: dict[int, int] = {}       # ordinal -> after_calls
         self.step_faults: set[int] = set()
-        self.random_spec: tuple[int, float, tuple[int, ...] | None] | None = None
+        # (seed, rate, stages, from_call)
+        self.random_spec: tuple[int, float, tuple[int, ...] | None, int] | None = None
 
     def transient(self, stage: int, at_calls: Iterable[int]) -> "FaultPlan":
         """Raise :class:`InjectedFault` on the given invocation counts of
@@ -108,16 +109,23 @@ class FaultPlan:
         return self
 
     def random_transients(self, rate: float, seed: int, *,
-                          stages: Iterable[int] | None = None) -> "FaultPlan":
+                          stages: Iterable[int] | None = None,
+                          from_call: int = 0) -> "FaultPlan":
         """Seeded random transients: invocation ``n`` of stage ``s`` faults
         when ``hash(seed, s, n) < rate`` — a pure function of the counts,
         so the schedule reproduces bit-exactly under any thread
-        interleaving (the chaos-soak test's schedule)."""
+        interleaving (the chaos-soak test's schedule).  ``from_call``
+        exempts the first invocations of each stage (calls ``n <
+        from_call`` never draw), so a warmup/calibration phase stays
+        fault-free while the measured phase gets the full rate."""
         if not 0.0 <= rate < 1.0:
             raise ValueError(f"rate must be in [0, 1) (got {rate})")
+        if from_call < 0:
+            raise ValueError(f"from_call must be >= 0 (got {from_call})")
         self.random_spec = (int(seed), float(rate),
                             tuple(int(s) for s in stages)
-                            if stages is not None else None)
+                            if stages is not None else None,
+                            int(from_call))
         return self
 
     def build(self) -> "FaultInjector":
@@ -211,8 +219,8 @@ class FaultInjector:
                     f"injected transient: stage {stage} call {n}"
                     + (f" (replica {replica})" if replica is not None else ""))
             if plan.random_spec is not None:
-                seed, rate, stages = plan.random_spec
-                if (stages is None or stage in stages) \
+                seed, rate, stages, from_call = plan.random_spec
+                if (stages is None or stage in stages) and n >= from_call \
                         and _hash_draw(seed, stage, n) < rate:
                     self.injected += 1
                     raise InjectedFault(

@@ -19,6 +19,19 @@ BENCH_PATH = os.path.join(ROOT, "BENCH_pipeline.json")
 # file are allowed so ADDING metrics never breaks the guard, but the keys
 # below must exist with these types)
 NUM = numbers.Real
+# per-priority-class outcome block in the overload sweep (one dict object
+# reused for all classes/rates — the validator only reads it)
+_OVL_CLASS = {
+    "submitted": int, "served": int, "shed": int, "expired": int,
+    "failed": int, "goodput": NUM, "p50_ms": NUM, "p99_ms": NUM,
+    "p999_ms": NUM,
+}
+_OVL_RATE = {
+    "offered_rps": NUM, "submitted": int, "served": int, "shed": int,
+    "expired": int, "failed": int, "unresolved": int, "accounted": bool,
+    "slo_violation_rate": NUM, "interactive": _OVL_CLASS,
+    "batch": _OVL_CLASS, "best_effort": _OVL_CLASS,
+}
 SCHEMA = {
     "bench": str,
     "smoke": bool,
@@ -117,6 +130,20 @@ SCHEMA = {
             "replicas": list, "results_match": bool,
         },
     },
+    "overload": {
+        "capacity_rps": NUM, "period_ms": NUM, "duration_s": NUM,
+        "mix": list,
+        "deadline_ms": {"interactive": NUM, "batch": NUM},
+        "sweep": {"0.7x": _OVL_RATE, "1x": _OVL_RATE, "2x": _OVL_RATE},
+        "chaos": {
+            "offered_rps": NUM, "capacity_rps": NUM, "submitted": int,
+            "served": int, "shed": int, "expired": int, "failed": int,
+            "unresolved": int, "accounted": bool, "out_of_order": int,
+            "retries": int, "quarantined": int, "errors_injected": int,
+            "lost_device": int, "replanned": bool, "swaps": int,
+            "interactive_goodput": NUM,
+        },
+    },
 }
 
 
@@ -210,6 +237,25 @@ def test_committed_bench_json_matches_schema():
     assert flt["transient"]["results_match"] is True
     assert flt["harris_transient"]["dropped"] == 0
     assert flt["harris_transient"]["results_match"] is True
+    # overload acceptance (ISSUE 9): under 2x sustained overload the
+    # interactive class keeps its SLO (p99 within deadline, goodput >=
+    # 0.9x offered — shedding lands on best-effort), every request is
+    # accounted for (submitted == served + shed + expired + failed,
+    # nothing blocked forever), and the chaos variant (2x overload +
+    # transients + device loss) retires in order with zero unaccounted
+    ovl = data["overload"]
+    for rate, entry in ovl["sweep"].items():
+        assert entry["accounted"] is True, f"{rate} lost requests"
+        assert entry["unresolved"] == 0, f"{rate} left requests blocked"
+    hot = ovl["sweep"]["2x"]
+    assert hot["interactive"]["goodput"] >= 0.9
+    assert hot["interactive"]["p99_ms"] <= ovl["deadline_ms"]["interactive"]
+    assert hot["best_effort"]["shed"] >= hot["interactive"]["shed"]
+    assert ovl["chaos"]["accounted"] is True
+    assert ovl["chaos"]["unresolved"] == 0
+    assert ovl["chaos"]["out_of_order"] == 0
+    assert ovl["chaos"]["errors_injected"] >= 1
+    assert ovl["chaos"]["replanned"] is True
 
 
 @pytest.mark.slow
