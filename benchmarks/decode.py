@@ -1,0 +1,363 @@
+"""Continuous batching on the decode hot path — TTFT under open-loop load.
+
+The serving workload continuous batching exists for: decode-style
+sessions where every request is a short stateful step (read the KV
+prefix, append one row, emit one token) and new sessions arrive
+mid-flight.  The baseline is *request-level* (batch-boundary)
+admission — the defect ISSUE 10 names: a cohort of up to ``MAX_BATCH``
+sessions decodes all its steps to completion while newly-arrived
+sessions queue at the boundary, so a long-running batch makes every
+arrival's first token wait out the whole cohort drain.  The continuous
+server admits a session the moment it arrives: its step is offered to
+the seam of an in-flight group (``executor.try_join``) or dispatched
+immediately as a padded open group that later arrivals join — same
+executor, same stage fns, only the admission policy differs.
+
+Workload
+--------
+Sessions arrive open-loop (Poisson, seeded).  Each session decodes
+``L_STEPS`` tokens *sequentially* — step ``t+1`` is submitted only after
+step ``t`` returned — through a 3-stage host pipeline whose middle stage
+is stateful: it reads the session's :class:`KVSlotPool` prefix and
+appends one row, so outputs depend on per-session history and any slot
+misrouting / double-write / out-of-order retirement shows up as a bitwise
+output mismatch between the two modes.  Step 0 is submitted as the
+``interactive`` class (TTFT is user-facing), continuation steps as the
+``batch`` class — the standard decode-serving split PR 9's priority
+queues exist for.  TTFT is measured from the session's scheduled
+*arrival*, so the boundary mode's cohort-gate wait is part of it.
+
+Both modes run the *same* shape-polymorphic host stage fns (no jit, so
+``compile_count`` is structurally 0 and the zero-steady-state-recompile
+gate is a real invariant, not vacuous: joins reuse the admitted group's
+padded buffers).  Capacity is anchored closed-loop: the measured serial
+(singleton-group) step throughput of the same executor plan; the open
+loop then offers ``LOAD * capacity`` steps/s.
+
+Acceptance (asserted here and in ``test_bench_schema.py``):
+  * p50 TTFT improves >= 1.5x (continuous vs batch-boundary) at 0.8x
+    capacity,
+  * zero drops (every submitted step served),
+  * zero out-of-order retirements,
+  * zero steady-state recompiles,
+  * outputs bitwise identical between the two modes,
+  * the seam was actually exercised (>= 1 in-flight join),
+  * the slot arena ends the run leak-free (``check_no_leaks``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.executor import PipelineExecutor
+from repro.launch.serve import RequestQueueServer
+from repro.runtime.kvstate import KVSlotPool
+
+IO = 8             # per-step token width
+L_STEPS = 4        # decode steps per session (step 0 == first token)
+STAGE_MS = 2.0     # per-group service time of each of the 3 stages
+MAX_BATCH = 4      # cohort width == batcher width == microbatch bucket
+MAX_WAIT_MS = 8.0  # dynamic-batching window (~ one pipeline service time)
+LOAD = 0.8         # offered steps/s as a fraction of measured capacity
+
+
+# --------------------------------------------------------------------------- #
+# The decode pipeline: 3 host stages, stateful KV middle
+# --------------------------------------------------------------------------- #
+def make_stage_fns(pool: KVSlotPool) -> list:
+    """Env-dict stage fns, shape-polymorphic over ``[IO]`` and ``[B, IO]``
+    so the same callables serve singleton and stacked groups (they are
+    passed as both ``stage_fns`` and ``batched_fns`` — nothing jits, so
+    the sleep that models the stage's service time is never traced away
+    and the recompile gate measures the real serving path)."""
+
+    def pre(env):
+        time.sleep(STAGE_MS / 1e3)
+        x = np.asarray(env["x"], dtype=np.float32)
+        return {"x": x + 1.0, "slot": env["slot"]}
+
+    def kv(env):
+        # stateful: read the session prefix, append this step's row.
+        # Per-row math so stacked [B, IO] and singleton [IO] groups are
+        # bitwise identical; slot -1 (padding / dead seat) reads empty
+        # and appends nowhere, so padded groups never touch live state.
+        time.sleep(STAGE_MS / 1e3)
+        x = np.asarray(env["x"], dtype=np.float32)
+        x2 = x if x.ndim == 2 else x[None]
+        slots = np.atleast_1d(np.asarray(env["slot"])).astype(np.int64)
+        y = np.empty_like(x2)
+        for i in range(x2.shape[0]):
+            sid = int(slots[i])
+            hist = pool.read(sid)["k"]            # [t, IO] prefix so far
+            pool.append(sid, k=x2[i])
+            y[i] = x2[i] + hist.sum(axis=0, dtype=np.float32)
+        return {"x": y if x.ndim == 2 else y[0]}
+
+    def post(env):
+        time.sleep(STAGE_MS / 1e3)
+        x = np.asarray(env["x"], dtype=np.float32)
+        return {"y": x * 0.5}
+
+    pre.__name__, kv.__name__, post.__name__ = "pre", "kv", "post"
+    return [pre, kv, post]
+
+
+def make_executor(pool: KVSlotPool, *, open_groups: bool,
+                  microbatch: int = MAX_BATCH) -> PipelineExecutor:
+    fns = make_stage_fns(pool)
+    kw: dict = {}
+    if microbatch > 1:
+        kw.update(microbatch=microbatch, pad_microbatches=True,
+                  buckets=(microbatch,), batched_fns=fns,
+                  pad_token=(np.zeros(IO, np.float32), -1))
+    # a deep token pool: submit_many must never block the batcher during
+    # an arrival burst — a stalled batcher cannot offer seam joins, which
+    # is exactly when the seam matters most
+    return PipelineExecutor(
+        fns, ["x", "slot"], ["y"], max_in_flight=64,
+        replicas=[1, 1, 1], open_groups=open_groups, **kw)
+
+
+def _measure_capacity(n_tokens: int = 48) -> float:
+    """Closed-loop serial capacity anchor: steps/s of the same 3-stage
+    plan run as singleton groups (dead slot -1, so no state touched) —
+    the pipeline's bottleneck-bound decode rate without batching."""
+    pool = KVSlotPool(1, L_STEPS, {"k": (IO,)})
+    ex = make_executor(pool, open_groups=False, microbatch=1)
+    tok = (np.zeros(IO, np.float32), -1)
+    ex.warmup(*tok)
+    t0 = time.perf_counter()
+    ex.run([tok] * n_tokens)
+    dt = time.perf_counter() - t0
+    ex.close()
+    return n_tokens / dt
+
+
+# --------------------------------------------------------------------------- #
+# Open-loop session driver
+# --------------------------------------------------------------------------- #
+def poisson_arrivals(rate_per_s: float, n: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_per_s, size=n))
+
+
+def session_inputs(n_sessions: int, seed: int) -> np.ndarray:
+    """[n_sessions, L_STEPS, IO] float32 per-step inputs, shared by both
+    modes so outputs are comparable bitwise."""
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n_sessions, L_STEPS, IO)).astype(np.float32)
+
+
+def _drive_sessions(srv: RequestQueueServer, pool: KVSlotPool,
+                    arrivals: np.ndarray, xs: np.ndarray,
+                    cohort: int | None = None) -> dict:
+    """Run sessions against the server; within a session, step t+1 goes
+    in only after step t resolved (decode is sequential).  Step 0 is
+    ``interactive`` (TTFT), later steps ``batch``.  The last step
+    releases the session's KV slot through the server's ``on_finish``
+    hook — the documented place per-request state is returned on every
+    terminal outcome.
+
+    ``cohort=None`` is continuous admission: a session's first step is
+    submitted the moment it arrives.  ``cohort=k`` is request-level
+    (batch-boundary) admission: up to ``k`` sessions decode together to
+    completion while later arrivals queue at the boundary — the next
+    cohort is admitted only once the running one fully drained.  TTFT is
+    ``t_done - scheduled arrival`` either way, so the gate wait counts.
+    """
+    n = len(arrivals)
+    ttft: list = [None] * n
+    outs: list = [[None] * L_STEPS for _ in range(n)]
+    slots: list = [None] * n
+    step = [0] * n
+    errors: list = []
+    active: dict = {}
+    waiting: deque = deque()
+    in_cohort: set = set()
+    rel_lock = threading.Lock()
+
+    def _release(sess: int) -> None:
+        with rel_lock:
+            s, slots[sess] = slots[sess], None
+        if s is not None:
+            pool.free(s)
+
+    def _submit(sess: int) -> None:
+        t = step[sess]
+        last = t == L_STEPS - 1
+        active[sess] = srv.submit(
+            xs[sess, t], slots[sess],
+            priority="interactive" if t == 0 else "batch",
+            on_finish=(lambda _r, s=sess: _release(s)) if last else None)
+
+    def _admit(sess: int) -> None:
+        slots[sess] = pool.alloc()
+        _submit(sess)
+
+    t0 = time.perf_counter()
+    nxt = 0
+    while nxt < n or active or waiting:
+        now = time.perf_counter() - t0
+        while nxt < n and arrivals[nxt] <= now:
+            if cohort is None:
+                _admit(nxt)
+            else:
+                waiting.append(nxt)
+            nxt += 1
+        if cohort is not None and not in_cohort and waiting:
+            # batch boundary: the previous cohort fully drained
+            while waiting and len(in_cohort) < cohort:
+                s = waiting.popleft()
+                in_cohort.add(s)
+                _admit(s)
+        progressed = False
+        for sess, r in list(active.items()):
+            if not r._event.is_set():     # resolved-yet poll (non-blocking)
+                continue
+            progressed = True
+            del active[sess]
+            t = step[sess]
+            try:
+                y = r.wait(0)
+            except BaseException as e:    # recorded; asserted empty below
+                errors.append((sess, t, repr(e)))
+                _release(sess)
+                in_cohort.discard(sess)
+                continue
+            outs[sess][t] = np.asarray(y)
+            if t == 0:
+                ttft[sess] = (r.t_done - (t0 + arrivals[sess])) * 1e3
+            step[sess] += 1
+            if step[sess] < L_STEPS:
+                _submit(sess)
+            else:
+                in_cohort.discard(sess)
+        if not progressed:
+            time.sleep(0.0003)
+    return {"ttft_ms": ttft, "outs": outs, "errors": errors}
+
+
+def _run_mode(continuous: bool, arrivals: np.ndarray,
+              xs: np.ndarray, n_slots: int) -> dict:
+    pool = KVSlotPool(n_slots, L_STEPS, {"k": (IO,)})
+    ex = make_executor(pool, open_groups=continuous)
+    ex.warmup(np.zeros(IO, np.float32), -1)
+    compiles_warm = ex.compile_count()
+    srv = RequestQueueServer(ex, max_batch=MAX_BATCH,
+                             max_wait_ms=MAX_WAIT_MS, queue_depth=512,
+                             continuous=continuous)
+    with srv:
+        drv = _drive_sessions(srv, pool, arrivals, xs,
+                              cohort=None if continuous else MAX_BATCH)
+    st = srv.stats()
+    xst = ex.stats()
+    compiles_run = ex.compile_count() - compiles_warm
+    ex.close()
+    pool.check_no_leaks()                 # every session freed its slot
+    ttft = [t for t in drv["ttft_ms"] if t is not None]
+    return {
+        "p50_ttft_ms": round(float(np.percentile(ttft, 50)), 3),
+        "p95_ttft_ms": round(float(np.percentile(ttft, 95)), 3),
+        "outs": drv["outs"],
+        "errors": drv["errors"],
+        "submitted": st["submitted"],
+        "served": st["requests_served"],
+        "dropped": st["shed"] + st["expired"] + st["failed"],
+        "seam_joins": st["seam_joins"],
+        "release_errors": st["release_errors"],
+        "out_of_order": xst.out_of_order_retired,
+        "recompiles_steady": compiles_run,
+        "slot_stats": pool.stats(),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Benchmark entry points
+# --------------------------------------------------------------------------- #
+_payload_cache: dict = {}
+
+
+def payload(smoke: bool = False) -> dict:
+    key = bool(smoke)
+    if key in _payload_cache:
+        return _payload_cache[key]
+    n_sessions = 48 if smoke else 160
+    capacity = _measure_capacity(24 if smoke else 48)
+    step_rate = LOAD * capacity           # offered decode steps/s
+    session_rate = step_rate / L_STEPS
+    arrivals = poisson_arrivals(session_rate, n_sessions, seed=7)
+    xs = session_inputs(n_sessions, seed=11)
+
+    boundary = _run_mode(False, arrivals, xs, n_slots=64)
+    continuous = _run_mode(True, arrivals, xs, n_slots=64)
+
+    match = all(
+        a is not None and b is not None and np.array_equal(a, b)
+        for sa, sb in zip(boundary.pop("outs"), continuous.pop("outs"))
+        for a, b in zip(sa, sb))
+    improvement = round(
+        boundary["p50_ttft_ms"] / max(continuous["p50_ttft_ms"], 1e-9), 3)
+    out = {
+        "bench": "decode", "smoke": key,
+        "n_sessions": n_sessions, "steps_per_session": L_STEPS,
+        "capacity_steps_per_s": round(capacity, 2),
+        "offered_steps_per_s": round(step_rate, 2),
+        "load": LOAD,
+        "p50_ttft_improvement": improvement,
+        "results_match": match,
+        "boundary": boundary,
+        "continuous": continuous,
+    }
+    total = n_sessions * L_STEPS
+    for name, m in (("boundary", boundary), ("continuous", continuous)):
+        assert not m["errors"], f"{name}: request errors {m['errors'][:3]}"
+        assert m["submitted"] == total and m["served"] == total, \
+            f"{name}: served {m['served']}/{m['submitted']} of {total}"
+        assert m["dropped"] == 0, f"{name}: dropped {m['dropped']}"
+        assert m["out_of_order"] == 0, \
+            f"{name}: {m['out_of_order']} out-of-order retirements"
+        assert m["recompiles_steady"] == 0, \
+            f"{name}: {m['recompiles_steady']} steady-state recompiles"
+        assert m["release_errors"] == 0, \
+            f"{name}: {m['release_errors']} on_finish hook errors"
+        m.pop("errors")
+    assert continuous["seam_joins"] > 0, \
+        "continuous mode never exercised the join seam"
+    assert match, "decode outputs differ between boundary and continuous"
+    assert improvement >= 1.5, (
+        f"p50 TTFT improvement {improvement}x < 1.5x "
+        f"(boundary {boundary['p50_ttft_ms']} ms vs "
+        f"continuous {continuous['p50_ttft_ms']} ms)")
+    _payload_cache[key] = out
+    return out
+
+
+def run(smoke: bool = False) -> list[tuple[str, float, str]]:
+    p = payload(smoke=smoke)
+    b, c = p["boundary"], p["continuous"]
+    return [
+        ("decode.p50_ttft_improvement", p["p50_ttft_improvement"],
+         f"boundary {b['p50_ttft_ms']} ms vs continuous "
+         f"{c['p50_ttft_ms']} ms at {p['load']}x capacity "
+         f"({p['offered_steps_per_s']} steps/s offered)"),
+        ("decode.continuous.p50_ttft_ms", c["p50_ttft_ms"],
+         f"p95 {c['p95_ttft_ms']} ms; {c['seam_joins']} seam joins"),
+        ("decode.boundary.p50_ttft_ms", b["p50_ttft_ms"],
+         f"p95 {b['p95_ttft_ms']} ms; cohort width {MAX_BATCH}"),
+        ("decode.results_match", int(p["results_match"]),
+         f"{p['n_sessions']} sessions x {p['steps_per_session']} steps "
+         "bitwise identical across modes"),
+        ("decode.dropped", b["dropped"] + c["dropped"],
+         f"{b['served']}+{c['served']} served; "
+         f"{b['out_of_order']}+{c['out_of_order']} out-of-order; "
+         f"{b['recompiles_steady']}+{c['recompiles_steady']} recompiles"),
+    ]
+
+
+if __name__ == "__main__":
+    import sys
+    for name, value, derived in run(smoke="--smoke" in sys.argv[1:]):
+        print(f"{name},{value},{str(derived).replace(',', ';')}")

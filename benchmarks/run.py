@@ -33,10 +33,11 @@ def _emit(mod) -> None:
 
 
 def main() -> None:
-    from benchmarks import (analysis, devices, faults, fig4_callgraph,
-                            fusion, overload, replan, replicate, roofline,
-                            table1_pipeline, table2_modules,
-                            table3_resources, trace_pipeline)
+    from benchmarks import (analysis, decode, devices, faults,
+                            fig4_callgraph, fusion, overload, replan,
+                            replicate, roofline, table1_pipeline,
+                            table2_modules, table3_resources,
+                            trace_pipeline)
 
     smoke = "--smoke" in sys.argv[1:]
     print("name,value,derived")
@@ -114,6 +115,17 @@ def main() -> None:
                   f"{ch['expired']} expired; {ch['failed']} failed of "
                   f"{ch['submitted']}; {ch['out_of_order']} out-of-order; "
                   f"{ch['errors_injected']} faults")
+            dec = decode.payload(smoke=True)  # asserts >= 1.5x TTFT + parity
+            db, dc = dec["boundary"], dec["continuous"]
+            print(f"smoke.decode.ttft,{dec['p50_ttft_improvement']},"
+                  f"continuous {dc['p50_ttft_ms']} ms vs boundary "
+                  f"{db['p50_ttft_ms']} ms p50 at {dec['load']}x capacity; "
+                  f"{dc['seam_joins']} seam joins")
+            print(f"smoke.decode.dropped,{db['dropped'] + dc['dropped']},"
+                  f"results_match {int(dec['results_match'])}; "
+                  f"{db['out_of_order'] + dc['out_of_order']} out-of-order; "
+                  f"{db['recompiles_steady'] + dc['recompiles_steady']} "
+                  f"recompiles")
             path = table1_pipeline.write_bench_json(smoke=True)
             print(f"smoke.bench_json,0,{path}")
         except Exception as e:
@@ -127,7 +139,7 @@ def main() -> None:
     # neighbors for the wall-clock benchmarks that precede them
     for mod in (table1_pipeline, table2_modules, table3_resources,
                 fig4_callgraph, fusion, roofline, analysis, trace_pipeline,
-                replan, replicate, devices, faults, overload):
+                replan, replicate, devices, faults, overload, decode):
         _emit(mod)
     try:
         path = table1_pipeline.write_bench_json()

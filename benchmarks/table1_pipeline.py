@@ -177,8 +177,8 @@ def bench_payload(smoke: bool = False) -> dict:
     """sequential / wavefront / async / fused tokens-per-sec + bottleneck ms,
     plus the fusion, adaptive-replan, and stage-replication benchmarks —
     the perf trajectory tracked across PRs."""
-    from benchmarks import (devices, faults, fusion, overload, replan,
-                            replicate, trace_pipeline)
+    from benchmarks import (decode, devices, faults, fusion, overload,
+                            replan, replicate, trace_pipeline)
 
     n_frames = 2 if smoke else 12
     size = (64, 96) if smoke else (270, 480)
@@ -193,7 +193,8 @@ def bench_payload(smoke: bool = False) -> dict:
     wide = replicate.payload(smoke=smoke)
     dev = devices.payload(smoke=smoke)
     flt = faults.payload(smoke=smoke)    # fault churn + serving loops
-    ovl = overload.payload(smoke=smoke)  # last: open-loop load saturation
+    ovl = overload.payload(smoke=smoke)  # open-loop load saturation
+    dec = decode.payload(smoke=smoke)    # last: open-loop decode sessions
     return {
         "bench": "table1_pipeline", "smoke": bool(smoke),
         "shape": m["shape"], "n_frames": m["n_frames"],
@@ -219,6 +220,7 @@ def bench_payload(smoke: bool = False) -> dict:
         "devices": dev,
         "faults": flt,
         "overload": ovl,
+        "decode": dec,
     }
 
 

@@ -422,6 +422,49 @@ def _rule_swallowed_exception(ctx: LintContext) -> Iterable[Diagnostic]:
 
 
 # --------------------------------------------------------------------------- #
+# state-slot-leak — KV slot alloc without a free path in the same function
+# --------------------------------------------------------------------------- #
+@file_rule("state-slot-leak")
+def _rule_state_slot_leak(ctx: LintContext) -> Iterable[Diagnostic]:
+    """A ``pool.alloc()`` call in a function with no ``.free`` reference and
+    no ``DecodeSession`` guard leaks a KV slot on any early exit — the pool
+    is a fixed arena, so a leaked slot is capacity lost until process death.
+    Functions that deliberately transfer slot ownership to a caller annotate
+    the line with ``# lint: ignore[state-slot-leak]``.  The kvstate module
+    itself (which defines the alloc/free pair) is exempt."""
+    if ctx.path.replace(os.sep, "/").endswith("runtime/kvstate.py"):
+        return []
+    out = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        frees = False
+        sessions = False
+        allocs: list[ast.Call] = []
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Attribute) and n.attr == "free":
+                frees = True
+            elif isinstance(n, ast.Name) and n.id == "DecodeSession":
+                sessions = True
+            elif (isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and n.func.attr == "alloc"):
+                allocs.append(n)
+        if frees or sessions:
+            continue
+        for call in allocs:
+            out.append(Diagnostic(
+                rule="state-slot-leak", path=ctx.path, line=call.lineno,
+                message=(f".alloc() in {fn.name}() with no .free path or "
+                         f"DecodeSession guard in the same function"),
+                hint="wrap the slot in DecodeSession, free it in a "
+                     "finally, or annotate "
+                     "'# lint: ignore[state-slot-leak]' if ownership "
+                     "transfers to the caller"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
 # dead-export — public module-level defs nobody imports
 # --------------------------------------------------------------------------- #
 @project_rule("dead-export")

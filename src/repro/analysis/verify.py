@@ -430,6 +430,43 @@ def _rule_serial_only_widened(ctx: VerifyContext) -> Iterable[Diagnostic]:
     return out
 
 
+@verify_rule("state-slot")
+def _rule_state_slot(ctx: VerifyContext) -> Iterable[Diagnostic]:
+    """Stateful (slot-bound) nodes mutate host-side state per call, so
+    three plan shapes are illegal for them: replicated stages (two workers
+    would race on the slot arena), hw placement (the state lives host-side
+    by construction), and fusion (the composed replay runs under jit)."""
+    out: list[Diagnostic] = []
+    for si, s, nn, node in _plan_nodes(ctx):
+        if node is None or not getattr(node, "state", None):
+            continue
+        stage = _stage_label(si)
+        if int(s.replicas) > 1:
+            out.append(Diagnostic(
+                rule="state-slot", stage=stage, node=nn,
+                message=(f"stateful node {nn} (state={node.state!r}) sits "
+                         f"in a stage widened to {s.replicas} workers"),
+                hint="stateful stages are serial_only; re-run "
+                     "assign_replicas with the IR"))
+        p = _node_placement(s, s.node_names.index(nn), node)
+        if p.is_hw:
+            out.append(Diagnostic(
+                rule="state-slot", stage=stage, node=nn,
+                message=(f"stateful node {nn} placed hw but its state "
+                         f"{node.state!r} lives host-side"),
+                hint="place the node sw; accelerate the stateless parts "
+                     "around it instead"))
+        if node.fused_from:
+            out.append(Diagnostic(
+                rule="state-slot", stage=stage, node=nn,
+                message=(f"stateful node {nn} was fused "
+                         f"({node.fn_key!r}) — the composed replay would "
+                         f"jit the slot mutation away"),
+                hint="fuse_adjacent_hw must refuse stateful nodes; "
+                     "split_fused_node to recover"))
+    return out
+
+
 @verify_rule("phantom-xfer")
 def _rule_phantom_xfer(ctx: VerifyContext) -> Iterable[Diagnostic]:
     """Transfer charges are only legal on genuinely multi-device plans —

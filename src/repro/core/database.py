@@ -32,6 +32,10 @@ class ModuleEntry:
     cost_hw: Callable[..., NodeCost] | None = None  # synthesis-report analog
     cost_sw: Callable[..., NodeCost] | None = None
     tags: tuple[str, ...] = ()
+    # name of the mutable per-request state this function touches (e.g. a
+    # KV-cache slot pool), or None for pure functions.  Threaded onto the
+    # traced Node as ``Node.state``; stateful entries never resolve to hw.
+    state: str | None = None
 
     def has_hw(self, *shape_args: Any) -> bool:
         if self.accelerated is None:
@@ -57,10 +61,15 @@ class ModuleDatabase:
                  applicable: Callable[..., bool] | None = None,
                  cost_hw: Callable[..., NodeCost] | None = None,
                  cost_sw: Callable[..., NodeCost] | None = None,
-                 tags: tuple[str, ...] = ()) -> ModuleEntry:
+                 tags: tuple[str, ...] = (),
+                 state: str | None = None) -> ModuleEntry:
+        if state is not None and accelerated is not None:
+            raise ValueError(
+                f"{name!r}: a stateful module cannot carry an accelerated "
+                "impl — the slot state lives host-side")
         e = ModuleEntry(name=name, software=software, accelerated=accelerated,
                         applicable=applicable, cost_hw=cost_hw, cost_sw=cost_sw,
-                        tags=tags)
+                        tags=tags, state=state)
         self.entries[name] = e
         return e
 

@@ -114,6 +114,18 @@ class Node:
     # backend feed every part exactly the values it consumed pre-fusion.
     fused_part_inputs: list[list[str]] = field(default_factory=list)
     fused_part_outputs: list[list[str]] = field(default_factory=list)
+    # keyword binding per part input recorded at fusion time (parallel to
+    # ``fused_part_inputs``; one list per part, None = positional) so the
+    # composed fallback impl replays each part's kw-bound operands exactly
+    # as traced — a fused MoE dispatch whose gate weights arrived by
+    # keyword misbinds if replayed positionally.
+    fused_part_kw: list[list[str | None]] = field(default_factory=list)
+    # stateful-slot binding: the name of the mutable per-request state this
+    # call reads/writes (e.g. a KV-cache slot pool), or None for pure
+    # functions.  A stateful node implies serial_only (one worker observes
+    # the slot writes in token order), must stay on the sw path (the state
+    # lives host-side), and must never fuse into a composed hw kernel.
+    state: str | None = None
 
     def __post_init__(self) -> None:
         # back-compat: legacy string placements (and JSON dicts) normalize

@@ -350,7 +350,11 @@ def assign_replicas(plan: PipelinePlan, ir: CourierIR | None = None, *,
     for s in plan.stages:
         ok = True
         if ir is not None:
-            ok = not any(ir.node(nn).serial_only for nn in s.node_names)
+            # stateful nodes are serial even if a hand-built IR forgot the
+            # flag: concurrent workers would race the slot-pool writes
+            ok = not any(ir.node(nn).serial_only
+                         or getattr(ir.node(nn), "state", None)
+                         for nn in s.node_names)
         replicable.append(ok)
     cap = max(1, min(max_replicas if max_replicas is not None
                      else worker_budget, worker_budget - (n - 1)))
@@ -640,10 +644,12 @@ def split_fused_node(ir: CourierIR, name: str,
     parts = []
     for i, pname in enumerate(node.fused_from):
         params = dict(node.fused_params[i]) if node.fused_params else {}
+        kw = (list(node.fused_part_kw[i]) if node.fused_part_kw else [])
         parts.append(Node(
             name=pname, fn_key=keys[i],
             inputs=list(node.fused_part_inputs[i]),
             outputs=list(node.fused_part_outputs[i]),
+            input_kw=kw,
             params=params, time_ms=float(part_times_ms[i]),
             time_source=node.time_source,
             serial_only=node.serial_only))
@@ -666,12 +672,18 @@ def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
                      vmem_bytes: int = VMEM_BYTES) -> CourierIR:
     """Merge maximal runs of adjacent DB-hit nodes with no branch.
 
-    A run is fusable when every node has an accelerated module and each
-    node's outputs are consumed *only* by the next node in the run (paper:
-    "if the functions have no branch nor loop").  A fusion is accepted only
-    when its estimated time ``<= accept_threshold * max(individual times)``
-    — i.e. the fused module must not become the new bottleneck, encoding the
-    paper's rejection of their slow fused cvtColor+cornerHarris module.
+    A run is fusable when every node has an accelerated module and the run
+    is *closed*: every non-final node's outputs are consumed only by nodes
+    inside the run and are not graph outputs (paper: "if the functions
+    have no branch nor loop" — branches that stay inside the run are fine:
+    a MoE gate feeding both dispatch and combine fuses as one run, and
+    keyword-bound operands replay through the recorded ``fused_part_kw``
+    routing).  Stateful nodes (``Node.state``) never fuse — their host-side
+    slot mutations can't live inside a composed hw kernel.  A fusion is
+    accepted only when its estimated time ``<= accept_threshold *
+    max(individual times)`` — i.e. the fused module must not become the new
+    bottleneck, encoding the paper's rejection of their slow fused
+    cvtColor+cornerHarris module.
 
     ``fused_cost_ms`` may be:
 
@@ -691,33 +703,40 @@ def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
     out = _clone_ir_shell(ir, ir.name + "+fused")
 
     def hw(n: Node) -> bool:
+        if getattr(n, "state", None):
+            # a stateful node's host-side slot mutation cannot live inside
+            # a composed hw kernel — never a fusion candidate
+            return False
         e = db.lookup(n.fn_key)
         return e is not None and e.has_hw(*[ir.values[i].shape for i in n.inputs])
 
-    def positional(n: Node) -> bool:
-        # fused modules (dedicated and composed) bind their operands
-        # positionally via ext_inputs; a node whose arrays were passed by
-        # keyword at trace time has no positional slot to map them to, so
-        # runs containing one are conservatively left unfused
-        return not any(k is not None for k in (n.input_kw or []))
-
-    def chains_to_next(i: int) -> bool:
-        if i + 1 >= len(ir.nodes):
-            return False
-        nxt = ir.nodes[i + 1].name
-        return all(ir.values[o].consumers == [nxt]
-                   and o not in ir.graph_outputs     # fusing would hide it
-                   for o in ir.nodes[i].outputs)
+    def closed_prefix(cand: list[Node]) -> bool:
+        """Every non-final node's outputs stay inside ``cand`` and are not
+        graph outputs.  Multi-consumer intermediates are accepted when ALL
+        consumers sit in the prefix (the MoE gate → dispatch+combine
+        diamond); an output escaping the prefix — or with no consumer at
+        all — keeps the run unfused at this length."""
+        names = {n.name for n in cand}
+        return all(
+            o not in ir.graph_outputs           # fusing would hide it
+            and ir.values[o].consumers
+            and all(c in names for c in ir.values[o].consumers)
+            for n in cand[:-1] for o in n.outputs)
 
     i = 0
     new_nodes: list[Node] = []
     while i < len(ir.nodes):
+        # grow the maximal adjacent hw span, then take the longest closed
+        # prefix (>= 2) as the fusion candidate
         j = i
-        while (hw(ir.nodes[j]) and positional(ir.nodes[j])
-               and chains_to_next(j)
-               and hw(ir.nodes[j + 1]) and positional(ir.nodes[j + 1])):
+        while j < len(ir.nodes) and hw(ir.nodes[j]):
             j += 1
-        run = ir.nodes[i:j + 1]
+        run = [ir.nodes[i]]
+        for L in range(j - i, 1, -1):
+            cand = ir.nodes[i:i + L]
+            if closed_prefix(cand):
+                run = cand
+                break
         if len(run) >= 2:
             est = fused_cost_ms(run)
             fe = est if isinstance(est, FusionEstimate) else None
@@ -750,12 +769,14 @@ def fuse_adjacent_hw(ir: CourierIR, db: ModuleDatabase,
                     fused_params=[dict(n.params) for n in run],
                     fused_part_inputs=[list(n.inputs) for n in run],
                     fused_part_outputs=[list(n.outputs) for n in run],
+                    fused_part_kw=[list(n.input_kw or [None] * len(n.inputs))
+                                   for n in run],
                     serial_only=any(n.serial_only for n in run))
                 if fe is not None:        # thread the modeled roofline through
                     fused.flops = fe.cost.flops
                     fused.bytes_rw = fe.cost.bytes_rw
                 new_nodes.append(fused)
-                i = j + 1
+                i += len(run)
                 continue
         new_nodes.append(run[0])
         i += 1

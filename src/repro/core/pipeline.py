@@ -38,6 +38,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Sequence
 
 import jax
+import jax.numpy as jnp
 
 from .costmodel import CostModel
 from .database import ModuleDatabase
@@ -47,7 +48,25 @@ from .partition import (PipelinePlan, StagePlan, fuse_adjacent_hw,
 from .placement import HW, SW, Placement, is_hw
 
 __all__ = ["PipelineGenerator", "BuiltPipeline", "StageFn",
-           "assign_placements", "make_stage_fns"]
+           "assign_placements", "make_stage_fns", "loop_batched"]
+
+
+def loop_batched(fn: Callable) -> Callable:
+    """Per-row loop replacement for ``jit(vmap(stage))`` on STATEFUL stages.
+
+    A stage that mutates a host-side slot pool can't be vmapped (vmap
+    traces the body once; the per-row pool writes would collapse into
+    one) and can't be jitted (the writes would never re-execute).  This
+    runs the raw stage body once per leading-axis row and restacks, so
+    micro-batched groups still flow through stateful stages — each row's
+    slot mutation happens exactly once, in row order.
+    """
+    def batched(env: dict) -> dict:
+        b = jnp.shape(next(iter(env.values())))[0]
+        outs = [fn({k: v[i] for k, v in env.items()}) for i in range(b)]
+        return {k: jnp.stack([o[k] for o in outs]) for k in outs[0]}
+    batched.__name__ = f"loop_batched_{getattr(fn, '__name__', 'stage')}"
+    return batched
 
 
 # --------------------------------------------------------------------------- #
@@ -174,17 +193,28 @@ def _resolve_impl(node: Node, ir: CourierIR, db: ModuleDatabase) -> Callable:
         if node.fused_part_inputs:
             # route each part exactly the values it consumed pre-fusion:
             # external operands come from the fused node's args, carried
-            # intermediates from earlier parts' outputs.
+            # intermediates from earlier parts' outputs.  Each part's
+            # keyword bindings (fused_part_kw, recorded at fusion time)
+            # replay under their trace-time names — a part whose software
+            # impl takes arrays keyword-only misbinds otherwise.
+            part_kws = (tuple(map(tuple, node.fused_part_kw))
+                        if node.fused_part_kw
+                        else tuple(tuple([None] * len(ins))
+                                   for ins in node.fused_part_inputs))
             routing = tuple(zip(tuple(map(tuple, node.fused_part_inputs)),
-                                tuple(map(tuple, node.fused_part_outputs))))
+                                tuple(map(tuple, node.fused_part_outputs)),
+                                part_kws))
             arg_names = tuple(node.inputs)
             out_names = tuple(node.outputs)
 
             def fused(*args: Any, _impls=tuple(impls),
                       _params=tuple(part_params), **_merged: Any):
                 env = dict(zip(arg_names, args))
-                for (ins, outs), f, pp in zip(routing, _impls, _params):
-                    out = f(*[env[v] for v in ins], **pp)
+                for (ins, outs, kws), f, pp in zip(routing, _impls, _params):
+                    pos = [env[v] for v, kw in zip(ins, kws) if kw is None]
+                    kw = {kw: env[v] for v, kw in zip(ins, kws)
+                          if kw is not None}
+                    out = f(*pos, **kw, **pp)
                     out_t = out if isinstance(out, (tuple, list)) else (out,)
                     env.update(zip(outs, out_t))
                 res = tuple(env[v] for v in out_names)
@@ -223,13 +253,16 @@ class StageFn:
     inputs — the generator checks liveness before enabling it).
     """
 
-    __slots__ = ("raw", "jitted", "donated", "_fn", "__name__")
+    __slots__ = ("raw", "jitted", "donated", "stateful", "_fn", "__name__")
 
     def __init__(self, fn: Callable, *, jit: bool = True,
                  donate: bool = False):
         self.raw = fn
         self.jitted = jit
         self.donated = donate and jit
+        # stage contains a stateful (slot-pool-mutating) node: never jit
+        # or vmap its body — the executor loop-batches it per row instead
+        self.stateful = False
         self._fn = (jax.jit(fn, donate_argnums=(0,) if donate else ())
                     if jit else fn)
         self.__name__ = getattr(fn, "__name__", "stage")
@@ -279,14 +312,20 @@ def make_stage_fns(ir: CourierIR, db: ModuleDatabase, plan: PipelinePlan,
     for k, s in enumerate(plan.stages):
         nodes = [ir.node(nn) for nn in s.node_names]
         live_out = boundaries[k + 1]
-        can_donate = (donate and jit and k > 0
+        # a stage containing a stateful node runs the raw Python body:
+        # its impl mutates a host-side slot pool, which jit would trace
+        # once and never re-execute.  Donation is off with it (the env
+        # arrays are read host-side, not handed to XLA).
+        has_state = any(getattr(n, "state", None) for n in nodes)
+        stage_jit = jit and not has_state
+        can_donate = (donate and stage_jit and k > 0
                       and not set(boundaries[k]) & set(ir.graph_inputs))
         # key on the nodes' CURRENT placements (what _resolve_impl reads),
         # not the plan's snapshot — a plan computed before assign_placements
         # would otherwise never hit the cache
         key = (tuple(s.node_names),
                tuple(Placement.parse(n.placement).key for n in nodes),
-               tuple(boundaries[k]), tuple(live_out), jit, can_donate)
+               tuple(boundaries[k]), tuple(live_out), stage_jit, can_donate)
         if cache is not None and key in cache:
             fns.append(cache[key])
             continue
@@ -311,7 +350,8 @@ def make_stage_fns(ir: CourierIR, db: ModuleDatabase, plan: PipelinePlan,
                     env[name] = o
             return {k2: env[k2] if k2 in env else _cap[k2] for k2 in _live}
 
-        sf = StageFn(stage, jit=jit, donate=can_donate)
+        sf = StageFn(stage, jit=stage_jit, donate=can_donate)
+        sf.stateful = has_state
         if cache is not None:
             cache[key] = sf
         fns.append(sf)
@@ -394,6 +434,8 @@ class BuiltPipeline:
                  inventory: Any = None, fault_injector: Any = None,
                  max_group_retries: int = 3, quarantine_after: int = 1,
                  retry_budget_ms: float | None = None,
+                 open_groups: bool = False,
+                 pad_token: tuple | None = None,
                  ) -> "PipelineExecutor":
         """Build a :class:`~repro.core.executor.PipelineExecutor` over the
         compiled stages (bounded token pool, eager async issue, optional
@@ -410,7 +452,9 @@ class BuiltPipeline:
         :attr:`~repro.core.partition.PipelinePlan.stage_devices`);
         ``fault_injector`` / ``max_group_retries`` / ``quarantine_after``
         / ``retry_budget_ms`` configure the executor's fault-tolerance
-        layer (see :mod:`repro.runtime.faults`)."""
+        layer (see :mod:`repro.runtime.faults`); ``open_groups`` /
+        ``pad_token`` enable continuous batching (in-flight seam
+        admission — see :meth:`PipelineExecutor.try_join`)."""
         from .executor import PipelineExecutor
         return PipelineExecutor.from_pipeline(
             self, max_in_flight=max_in_flight, microbatch=microbatch,
@@ -420,7 +464,8 @@ class BuiltPipeline:
             fault_injector=fault_injector,
             max_group_retries=max_group_retries,
             quarantine_after=quarantine_after,
-            retry_budget_ms=retry_budget_ms)
+            retry_budget_ms=retry_budget_ms,
+            open_groups=open_groups, pad_token=pad_token)
 
     def run_async(self, tokens: Iterable[tuple | Any], *,
                   max_in_flight: int | None = None,
@@ -447,7 +492,9 @@ class BuiltPipeline:
         """
         if self._batched_fns is None:
             self._batched_fns = [
-                jax.jit(jax.vmap(getattr(f, "raw", f)))
+                loop_batched(getattr(f, "raw", f))
+                if getattr(f, "stateful", False)
+                else jax.jit(jax.vmap(getattr(f, "raw", f)))
                 for f in self.stage_fns]
         return self._batched_fns
 

@@ -102,6 +102,12 @@ class StageProfiler:
         # device instead of re-widening onto it
         self._errors: list[int] = [0] * n_stages
         self._device_errors: dict[int, int] = {}
+        # seam occupancy (continuous batching): EMA of the fill fraction
+        # each group sealed with (real seats / total rows) plus a seal
+        # count — low fill = admission leaves seats on the table, the
+        # signal the serving layer's seam-aware predicted wait reads
+        self._seam_fill: float | None = None
+        self._seam_seals = 0
 
     def clone_for(self, n_stages: int) -> "StageProfiler":
         """Fresh profiler with the same knobs for a re-planned stage count."""
@@ -147,6 +153,22 @@ class StageProfiler:
                 rec[0] += 1
                 rec[1] = ms if rec[1] is None \
                     else (1.0 - self.alpha) * rec[1] + self.alpha * ms
+
+    def record_seam(self, filled: int, capacity: int) -> None:
+        """Record one sealed group's seam occupancy (continuous batching):
+        ``filled`` real seats out of ``capacity`` stacked rows."""
+        if capacity <= 0:
+            return
+        frac = min(max(filled / capacity, 0.0), 1.0)
+        with self._lock:
+            self._seam_fill = frac if self._seam_fill is None \
+                else (1.0 - self.alpha) * self._seam_fill + self.alpha * frac
+            self._seam_seals += 1
+
+    def seam_fill(self) -> float | None:
+        """EMA seam fill fraction (None before any group sealed)."""
+        with self._lock:
+            return self._seam_fill
 
     def record_error(self, stage: int, replica: int | None = None,
                      device: int | None = None) -> None:
@@ -271,8 +293,13 @@ class StageProfiler:
             if self.error_count(k):
                 entry["errors"] = self.error_count(k)
             stages.append(entry)
-        return {"n_stages": self.n_stages, "sample_every": self.sample_every,
-                "window": self.window, "per_stage": stages}
+        out = {"n_stages": self.n_stages, "sample_every": self.sample_every,
+               "window": self.window, "per_stage": stages}
+        with self._lock:
+            if self._seam_seals:
+                out["seam"] = {"fill_ema": _round(self._seam_fill),
+                               "seals": self._seam_seals}
+        return out
 
     def reset(self) -> None:
         with self._lock:
@@ -285,6 +312,8 @@ class StageProfiler:
             self._device.clear()
             self._errors = [0] * self.n_stages
             self._device_errors.clear()
+            self._seam_fill = None
+            self._seam_seals = 0
 
     # -- cost-model write-back -------------------------------------------------- #
     def apply_to_ir(self, ir: "CourierIR", plan: "PipelinePlan", *,

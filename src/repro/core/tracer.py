@@ -280,11 +280,16 @@ class Frontend:
                     outs.append(vn)
                 else:
                     outs.append(val_for(o, m, nname))
+            entry = self.db.lookup(r.fn_key)
+            state = entry.state if entry is not None else None
             ir.add_node(Node(name=nname, fn_key=r.fn_key, inputs=ins,
                              outputs=outs, input_kw=list(r.in_kw),
                              params=r.params,
                              time_ms=r.time_ms if ctx.profile else None,
-                             t_start=r.t_start, t_end=r.t_end))
+                             t_start=r.t_start, t_end=r.t_end,
+                             # stateful calls pin one worker: slot writes
+                             # must be observed in token order
+                             state=state, serial_only=bool(state)))
 
         flat_out = [a for a in jax.tree.leaves(out) if _is_array(a)]
         for a in flat_out:

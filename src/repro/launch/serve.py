@@ -122,6 +122,12 @@ class Request:
     error: BaseException | None = None
     deadline_ms: float | None = None  # end-to-end deadline (degrade if past)
     priority: int = INTERACTIVE      # class index into PRIORITY_CLASSES
+    # release hook: called exactly once with the request AFTER it resolved
+    # (every terminal outcome — served/shed/expired/failed), outside the
+    # server lock.  This is where per-request resources pinned at submit
+    # time (a KV-cache slot) are returned: a shed or expired request must
+    # free its slot exactly like a served one, or the arena leaks.
+    on_finish: Any = None
     _event: threading.Event = field(default_factory=threading.Event)
     _finished: bool = False           # owner: RequestQueueServer._lock
 
@@ -279,6 +285,8 @@ class AdmissionController:
         self.ref_periods = float(ref_periods)
         self._lock = threading.Lock()
         self._level = 0
+        self._window_max_level = 0       # worst level seen this window
+        self._streak = 0                 # consecutive level-2 windows
         self.admitted = [0] * N_CLASSES
         self.shed = [0] * N_CLASSES
         self.shed_reasons = {"deadline": 0, "ladder": 0, "queue_full": 0}
@@ -322,6 +330,38 @@ class AdmissionController:
         """Batcher max-wait multiplier for the last observed level."""
         return self.degraded_wait_scale if self._level >= 2 else 1.0
 
+    def end_window(self) -> None:
+        """Close one observation window of the sustained-pressure signal.
+
+        A window whose *worst* admission-time ladder level reached 2
+        extends the level-2 streak; anything milder resets it.  The
+        batcher closes a window alongside every admission-period refresh,
+        so the streak counts consecutive dispatch windows spent at the top
+        of the ladder — the trigger
+        :meth:`~repro.runtime.driver.ElasticPlanner.autoscale_from_ladder`
+        watches to widen the plan instead of shedding forever.
+        """
+        with self._lock:
+            if self._window_max_level >= 2:
+                self._streak += 1
+            else:
+                self._streak = 0
+            self._window_max_level = 0
+
+    @property
+    def level2_streak(self) -> int:
+        """Consecutive closed windows whose worst level reached 2."""
+        with self._lock:
+            return self._streak
+
+    def reset_streak(self) -> None:
+        """Restart the sustained-pressure observation window — called by
+        the autoscaler after it acted on a streak, so one burst triggers
+        one widen attempt rather than one per subsequent window."""
+        with self._lock:
+            self._streak = 0
+            self._window_max_level = 0
+
     # -- the admission rule ---------------------------------------------------- #
     def admit(self, *, priority: int, deadline_ms: float | None,
               depth_ahead: int, depth_total: int) -> str | None:
@@ -333,6 +373,8 @@ class AdmissionController:
         level = self.level(depth_total)
         with self._lock:
             self._level = level
+            if level > self._window_max_level:
+                self._window_max_level = level
             if level >= 1 and priority >= BEST_EFFORT:
                 self.shed[priority] += 1
                 self.shed_reasons["ladder"] += 1
@@ -366,6 +408,7 @@ class AdmissionController:
                 "batch_hint": self.batch_hint,
                 "slo_ref_ms": round(self._ref_ms(), 4),
                 "level": self._level,
+                "level2_streak": self._streak,
                 "admitted": {PRIORITY_CLASSES[c]: self.admitted[c]
                              for c in range(N_CLASSES)},
                 "shed": {PRIORITY_CLASSES[c]: self.shed[c]
@@ -549,17 +592,37 @@ class RequestQueueServer:
     fast-fail, never dispatched), ``expired`` (its ``deadline_ms`` passed
     while queued or in flight — :class:`DeadlineExceeded`, the SLO
     violation signal), ``failed`` (executor error).
+
+    **Continuous batching** (``continuous=True``, executor built with
+    ``open_groups=True``): the batcher never waits out ``max_wait_ms`` to
+    fill a batch.  Each collected request is first *offered to the seam*
+    (``executor.try_join``) — a free pad seat in a group still inside its
+    stage-0 ring-residency window serves it with zero batching delay —
+    and only seam misses are dispatched as a fresh (padded, open) group
+    that later arrivals can join in flight.  Admission predictions
+    subtract ``executor.seam_capacity()`` from the queue depth, since
+    open seats serve queued work without a new dispatch group.
     """
 
     def __init__(self, executor: PipelineExecutor, *, max_batch: int = 8,
                  max_wait_ms: float = 5.0, queue_depth: int | None = None,
                  plan: Any = None, admission: AdmissionController | None = None,
-                 starvation_credit: int = 4):
+                 starvation_credit: int = 4, continuous: bool = False):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if continuous and not getattr(executor, "open_groups", False):
+            raise ValueError(
+                "continuous batching needs an executor built with "
+                "open_groups=True (the join seam is the stage-0 "
+                "ring-residency window)")
         self.executor = executor
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
+        # continuous batching: requests join in-flight groups at the
+        # executor's seam (try_join) instead of waiting for the batcher's
+        # max-wait window; the batcher never holds a request back to fill
+        # a batch — a miss seeds a new (padded, open) group immediately
+        self.continuous = bool(continuous)
         if plan is not None:
             # replication-aware sizing: the plan's effective (widened)
             # bottleneck period drives the batching knobs, not the serial one
@@ -575,6 +638,8 @@ class RequestQueueServer:
         self._retirer: threading.Thread | None = None
         self._done: list[Request] = []
         self._batch_sizes: list[int] = []
+        self._seam_joined = 0            # requests admitted via try_join
+        self._release_errors: list[BaseException] = []
         self._class_counts = [
             {"submitted": 0, "served": 0, "shed": 0, "expired": 0, "failed": 0}
             for _ in range(N_CLASSES)]
@@ -640,6 +705,15 @@ class RequestQueueServer:
             if dispatched:
                 self._done.append(r)
         r._event.set()
+        cb = r.on_finish
+        if cb is not None:
+            # outside the lock: the hook may free a KV slot / touch the
+            # executor; exactly-once is inherited from the _finished guard
+            try:
+                cb(r)
+            except BaseException as e:
+                with self._lock:
+                    self._release_errors.append(e)
 
     def _fail_request(self, r: Request, err: BaseException) -> None:
         outcome = "shed"
@@ -657,7 +731,8 @@ class RequestQueueServer:
 
     # -- client API ---------------------------------------------------------- #
     def submit(self, *args: Any, deadline_ms: float | None = None,
-               priority: "int | str" = INTERACTIVE) -> Request:
+               priority: "int | str" = INTERACTIVE,
+               on_finish: Any = None) -> Request:
         """Enqueue one request into its priority class.
 
         Without an admission controller the put blocks when the bounded
@@ -671,10 +746,16 @@ class RequestQueueServer:
         failed with :class:`DeadlineExceeded` at whichever point catches
         it first (submit-time prediction, dispatch, or retirement) — never
         returned late.
+
+        ``on_finish`` (called exactly once with the request, on every
+        terminal outcome) is where per-request resources — a KV-cache
+        slot — are released; it is installed *before* any shed path can
+        fire, so a fast-failed request still returns its slot.
         """
         pri = priority_of(priority)
         r = Request(args=args, t_submit=time.perf_counter(),
-                    deadline_ms=deadline_ms, priority=pri)
+                    deadline_ms=deadline_ms, priority=pri,
+                    on_finish=on_finish)
         with self._lock:
             self._class_counts[pri]["submitted"] += 1
         if self._stopped:
@@ -684,10 +765,20 @@ class RequestQueueServer:
         adm = self._admission
         if adm is not None:
             in_flight = self.executor.in_flight
+            # seam-aware admission: seats already open at the batch seam
+            # serve queued work without a fresh dispatch group, so they
+            # come off the predicted depth (floored at 0)
+            seam = 0
+            if self.continuous:
+                cap = getattr(self.executor, "seam_capacity", None)
+                if cap is not None:
+                    seam = int(cap())
             reason = adm.admit(
                 priority=pri, deadline_ms=deadline_ms,
-                depth_ahead=self._queues.depth_upto(pri) + in_flight,
-                depth_total=self._queues.qsize() + in_flight)
+                depth_ahead=max(
+                    self._queues.depth_upto(pri) + in_flight - seam, 0),
+                depth_total=max(
+                    self._queues.qsize() + in_flight - seam, 0))
             if reason is not None:
                 self._finish(r, "shed", Overloaded(reason))
                 return r
@@ -835,6 +926,8 @@ class RequestQueueServer:
             "failed": sum(c["failed"] for c in counts),
             "submitted": sum(c["submitted"] for c in counts),
             "classes": classes,
+            "seam_joins": self._seam_joined,
+            "release_errors": len(self._release_errors),
             "slo_violation_rate": self.slo_violation_rate(),
             "admission": (self._admission.snapshot()
                           if self._admission is not None else None),
@@ -865,6 +958,15 @@ class RequestQueueServer:
             wait_ms *= self._admission.max_wait_scale()
         deadline = time.perf_counter() + wait_ms / 1e3
         while len(batch) < self.max_batch:
+            if self.continuous:
+                # continuous batching never holds a request back to fill
+                # a batch: take what is queued right now, dispatch, and
+                # let late arrivals join the group at the executor seam
+                nxt = self._queues.get_from(first.priority, 0.0)
+                if nxt is None:
+                    break
+                batch.append(nxt)
+                continue
             remaining = deadline - time.perf_counter()
             if remaining <= 0:
                 break
@@ -877,11 +979,14 @@ class RequestQueueServer:
         return batch
 
     def _refresh_admission_period(self) -> None:
-        """Feed the admission rule the measured dispatch-group period."""
+        """Feed the admission rule the measured dispatch-group period and
+        close one pressure-observation window (the level-2 streak tick)."""
         adm = self._admission
+        if adm is None:
+            return
+        adm.end_window()
         prof = getattr(self.executor, "profiler", None)
-        if adm is None or prof is None \
-                or not hasattr(prof, "effective_period_ms"):
+        if prof is None or not hasattr(prof, "effective_period_ms"):
             return
         period = prof.effective_period_ms(
             getattr(self.executor, "replicas", None))
@@ -912,6 +1017,35 @@ class RequestQueueServer:
                 continue
             for r in batch:
                 r.t_batch = t_batch
+            if self.continuous:
+                # offer every request to the seam first: a free seat in an
+                # in-flight group serves it without waiting for a fresh
+                # dispatch group (in-order retirement is preserved — the
+                # joined token retires with its adoptive group's seq)
+                rest: list[Request] = []
+                joined = 0
+                for r in batch:
+                    try:
+                        h = self.executor.try_join(r.args)
+                    except ExecutorClosed:
+                        h = None         # submit_many below reports it
+                    except BaseException as e:
+                        self._finish(r, "failed", e)
+                        continue
+                    if h is not None:
+                        joined += 1
+                        self._issued.put((r, h))
+                    else:
+                        rest.append(r)
+                if joined:
+                    # seam joins are not batches: they rode along inside
+                    # groups already dispatched, so _batch_sizes (the
+                    # dispatch-group log) deliberately excludes them
+                    with self._lock:
+                        self._seam_joined += joined
+                batch = rest
+                if not batch:
+                    continue
             try:
                 # eager async issue; blocks only on token-pool backpressure
                 handles = self.executor.submit_many([r.args for r in batch])

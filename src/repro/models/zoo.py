@@ -31,7 +31,8 @@ from repro.core.database import ModuleDatabase
 from repro.kernels.ops import register_rmsnorm_matmul_modules
 
 __all__ = ["make_zoo_db", "transformer_demo", "init_transformer_params",
-           "recurrent_demo", "init_recurrent_params"]
+           "recurrent_demo", "init_recurrent_params",
+           "make_decode_attention", "register_decode_modules"]
 
 
 # --------------------------------------------------------------------------- #
@@ -66,6 +67,87 @@ def _rope(x: jax.Array, theta: float) -> jax.Array:
     x1, x2 = x[..., :half], x[..., half:]
     return jnp.concatenate(
         [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def _rope_at(x: jax.Array, pos: int, theta: float) -> jax.Array:
+    """Rotary embedding of ONE token at absolute position ``pos``;
+    x: [1, H, hd].  Bit-matches row ``pos`` of :func:`_rope` over the full
+    prefix (same fp32 angle math), which is what makes incremental decode
+    agree with the re-run-the-prefix baseline."""
+    half = x.shape[-1] // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = jnp.float32(pos) * freq                                # [half]
+    cos, sin = jnp.cos(ang)[None, None, :], jnp.sin(ang)[None, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def make_decode_attention(pool: Any, *, n_heads: int,
+                          theta: float = 10000.0,
+                          k_buf: str = "k", v_buf: str = "v") -> Callable:
+    """Incremental decode attention over a KV slot pool (STATEFUL).
+
+    Returns ``attn(x, slot, wq, wk, wv, wo) -> [1, d]``: one new token
+    ``x: [1, d]`` plus its request's ``slot`` id (scalar; ``-1`` = dead
+    row).  The op reads the slot's cached (rotated) keys/values, projects
+    and RoPE-rotates the new token at absolute position ``len(slot)``,
+    appends its k/v row to the cache, and attends over cache + self — an
+    O(prefix) step instead of the O(prefix²) full-prefix re-run, and
+    bit-identical to :func:`sw_attention` on the accumulated prefix (the
+    per-row unit test asserts it).
+
+    Host-side state: the impl must run UNJITTED and serially — register it
+    with ``state=`` (see :func:`register_decode_modules`) so the tracer
+    marks the node ``serial_only`` and the backend keeps the stage off the
+    jit/vmap/fusion paths.  A dead row (``slot < 0``) appends nothing and
+    attends over only itself, so padding/evicted seats in a continuously
+    batched group are harmless no-ops on the pool.
+    """
+    def attention_decode(x: jax.Array, slot: Any, wq: jax.Array,
+                         wk: jax.Array, wv: jax.Array,
+                         wo: jax.Array) -> jax.Array:
+        d = x.shape[-1]
+        hd = d // n_heads
+        s_id = int(np.asarray(slot))
+        pos = pool.length(s_id)
+        q = (x @ wq).reshape(1, n_heads, hd)
+        k = (x @ wk).reshape(1, n_heads, hd)
+        v = (x @ wv).reshape(1, n_heads, hd)
+        q, k = _rope_at(q, pos, theta), _rope_at(k, pos, theta)
+        cache = pool.read(s_id)
+        pool.append(s_id, **{k_buf: np.asarray(k[0]),
+                             v_buf: np.asarray(v[0])})
+        K = jnp.concatenate(
+            [jnp.asarray(cache[k_buf], dtype=x.dtype), k], axis=0)
+        V = jnp.concatenate(
+            [jnp.asarray(cache[v_buf], dtype=x.dtype), v], axis=0)
+        s = jnp.einsum("thi,mhi->htm", q.astype(jnp.float32),
+                       K.astype(jnp.float32)) / np.sqrt(hd)
+        # causality is structural: the cache holds only positions < pos
+        p = jax.nn.softmax(s, axis=-1)
+        y = jnp.einsum("htm,mhi->thi", p, V.astype(jnp.float32))
+        return (y.reshape(1, d).astype(x.dtype)) @ wo
+
+    attention_decode.__name__ = "attention_decode"
+    return attention_decode
+
+
+def register_decode_modules(db: ModuleDatabase, pool: Any, *,
+                            n_heads: int, theta: float = 10000.0,
+                            name: str = "attention_decode",
+                            state: str = "kv") -> None:
+    """Register the stateful incremental-decode attention row.
+
+    ``state=`` marks the row stateful: the tracer threads it onto the
+    traced ``Node.state`` (implying ``serial_only``), the backend runs its
+    stage unjitted, and fusion/replication/hw placement all refuse it (the
+    ``state-slot`` verify rule enforces the same).  Multi-layer models
+    register one row per layer, each with its own pool.
+    """
+    db.register(name, software=make_decode_attention(
+        pool, n_heads=n_heads, theta=theta),
+        cost_sw=_c_attn, tags=("zoo", "decode"), state=state)
 
 
 def sw_add(a: jax.Array, b: jax.Array) -> jax.Array:

@@ -2,8 +2,10 @@ from .driver import (ElasticPlanner, FaultTolerantDriver, ReplanDecision,
                      StragglerMonitor, TrainResult)
 from .faults import (DeviceLostError, FaultInjector, FaultPlan,
                      InjectedFault, as_injector)
+from .kvstate import DecodeSession, KVSlotPool, SlotError
 
 __all__ = ["ElasticPlanner", "FaultTolerantDriver", "ReplanDecision",
            "StragglerMonitor", "TrainResult",
            "DeviceLostError", "FaultInjector", "FaultPlan",
-           "InjectedFault", "as_injector"]
+           "InjectedFault", "as_injector",
+           "DecodeSession", "KVSlotPool", "SlotError"]

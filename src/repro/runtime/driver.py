@@ -505,6 +505,42 @@ class ElasticPlanner:
         self.last_decision = d
         return d
 
+    def autoscale_from_ladder(self, admission: Any, profiler: Any, *,
+                              worker_budget: "int | str",
+                              streak: int = 3,
+                              **replan_kw: Any) -> ReplanDecision | None:
+        """Capacity response to sustained overload: widen instead of shed.
+
+        The admission controller's degradation ladder sheds load when the
+        predicted backlog breaches its reference — the right *transient*
+        response, and the wrong *steady-state* one: a server pinned at
+        ladder level 2 is simply under-provisioned, and shedding forever
+        converts a capacity problem into a permanent availability loss.
+        This method watches the controller's ``level2_streak`` (consecutive
+        observation windows whose worst admission-time level reached 2,
+        one window per dispatched batch) and, once the streak reaches
+        ``streak``, runs :meth:`replan_from_profile` with the given
+        ``worker_budget`` — the widening candidate multiplies workers on
+        the measured bottleneck stage, which raises the very period the
+        ladder's backlog prediction is built on.
+
+        Returns ``None`` while the streak is below the trigger; otherwise
+        the :class:`ReplanDecision` (which the caller deploys through
+        ``RequestQueueServer.swap_executor`` when ``replanned``).  The
+        streak is reset either way — one sustained burst triggers one
+        widen attempt, and the ladder keeps protecting the server while
+        the next profile window accumulates.
+        """
+        if int(streak) < 1:
+            raise ValueError(f"streak must be >= 1 (got {streak})")
+        if int(admission.level2_streak) < int(streak):
+            return None
+        decision = self.replan_from_profile(profiler,
+                                            worker_budget=worker_budget,
+                                            **replan_kw)
+        admission.reset_streak()
+        return decision
+
     def replan_on_inventory_change(self, diff: InventoryDiff, *,
                                    profiler: Any = None, stats: Any = None,
                                    max_in_flight: int | None = None,

@@ -32,6 +32,15 @@ _OVL_RATE = {
     "slo_violation_rate": NUM, "interactive": _OVL_CLASS,
     "batch": _OVL_CLASS, "best_effort": _OVL_CLASS,
 }
+# one admission mode of the continuous-batching decode benchmark (the
+# boundary and continuous entries share this shape)
+_DEC_MODE = {
+    "p50_ttft_ms": NUM, "p95_ttft_ms": NUM, "submitted": int,
+    "served": int, "dropped": int, "seam_joins": int,
+    "release_errors": int, "out_of_order": int, "recompiles_steady": int,
+    "slot_stats": {"n_slots": int, "live": int, "allocs": int,
+                   "frees": int, "high_water": int},
+}
 SCHEMA = {
     "bench": str,
     "smoke": bool,
@@ -143,6 +152,12 @@ SCHEMA = {
             "lost_device": int, "replanned": bool, "swaps": int,
             "interactive_goodput": NUM,
         },
+    },
+    "decode": {
+        "n_sessions": int, "steps_per_session": int,
+        "capacity_steps_per_s": NUM, "offered_steps_per_s": NUM,
+        "load": NUM, "p50_ttft_improvement": NUM, "results_match": bool,
+        "boundary": _DEC_MODE, "continuous": _DEC_MODE,
     },
 }
 
@@ -256,6 +271,24 @@ def test_committed_bench_json_matches_schema():
     assert ovl["chaos"]["out_of_order"] == 0
     assert ovl["chaos"]["errors_injected"] >= 1
     assert ovl["chaos"]["replanned"] is True
+    # continuous-batching decode acceptance (ISSUE 10): continuous
+    # admission improves p50 TTFT >= 1.5x over batch-boundary (cohort)
+    # admission at 0.8x capacity, with zero drops, in-order retirement,
+    # no steady-state recompiles, bitwise-identical outputs, a live join
+    # seam, and a leak-free slot arena on both paths
+    dec = data["decode"]
+    assert dec["p50_ttft_improvement"] >= 1.5
+    assert dec["results_match"] is True
+    assert dec["continuous"]["seam_joins"] >= 1
+    for mode in ("boundary", "continuous"):
+        m = dec[mode]
+        assert m["served"] == m["submitted"], f"decode.{mode} lost requests"
+        assert m["dropped"] == 0
+        assert m["out_of_order"] == 0
+        assert m["recompiles_steady"] == 0
+        assert m["release_errors"] == 0
+        assert m["slot_stats"]["live"] == 0
+        assert m["slot_stats"]["allocs"] == m["slot_stats"]["frees"]
 
 
 @pytest.mark.slow

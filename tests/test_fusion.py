@@ -292,3 +292,124 @@ def test_donated_stages_keep_results_correct():
     first = off.pipeline(frame)
     for _ in range(3):
         _close(off.pipeline(frame), first, tol=1e-7)
+
+
+# --------------------------------------------------------------------------- #
+# fusion-pass generality: kw-bound runs, in-run branches, stateful guards
+# (ISSUE 10 satellite regressions for the MoE-shaped exemplars)
+# --------------------------------------------------------------------------- #
+def _kw_fused_offload():
+    """x -> kscale(x, s=...) -> kshift: the middle operand is keyword-only,
+    so fusion must record and replay the binding (fused_part_kw)."""
+    from repro.core import courier_offload
+
+    db = ModuleDatabase("t")
+
+    def impl_scale(x, *, s):
+        return x * s
+
+    def impl_shift(x, b):
+        return x + b
+
+    db.register("kscale", software=impl_scale, accelerated=impl_scale)
+    db.register("kshift", software=impl_shift, accelerated=impl_shift)
+    lib = Library(db)
+
+    def app(x, s, b):
+        return lib.kshift(lib.kscale(x, s=s), b)
+
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (16, 8))
+    s = jax.random.normal(ks[1], (16, 8)) * 0.5
+    b = jax.random.normal(ks[2], (16, 8))
+    off = courier_offload(app, x, s, b, db=db, prefer_hw=True, fuse=True,
+                          fused_cost_ms=lambda run: 0.0)
+    return off, app, (x, s, b)
+
+
+def test_kw_bound_run_fuses_and_replays_bindings():
+    off, app, args = _kw_fused_offload()
+    fused = [n for n in off.pipeline.ir.nodes if n.fused_from]
+    assert len(fused) == 1 and fused[0].fn_key == "kscale+kshift"
+    # the keyword binding of the first part is part of the routing metadata
+    assert fused[0].fused_part_kw[0] == [None, "s"]
+    np.testing.assert_allclose(np.asarray(off.pipeline(*args)),
+                               np.asarray(app(*args)), atol=1e-6)
+
+
+def test_split_fused_node_roundtrips_input_kw():
+    from repro.core import split_fused_node
+
+    off, _, _ = _kw_fused_offload()
+    ir = off.pipeline.ir
+    fused = next(n for n in ir.nodes if n.fused_from)
+    back = split_fused_node(ir, fused.name)
+    keys = [n.fn_key for n in back.nodes]
+    assert keys == ["kscale", "kshift"]
+    scale = next(n for n in back.nodes if n.fn_key == "kscale")
+    assert scale.input_kw == [None, "s"]             # binding survives the undo
+    assert scale.outputs == fused.fused_part_outputs[0]
+    back.validate()
+
+
+def test_multi_consumer_intermediate_fuses_when_run_closed():
+    """The MoE diamond: gate feeds BOTH dispatch and combine, all inside
+    one hw run — a branch that stays inside the run must still fuse."""
+    from repro.core import courier_offload
+
+    db = ModuleDatabase("t")
+    for name, fn in (("gate", lambda x: x * 2.0),
+                     ("dispatch", lambda g: g + 1.0),
+                     ("combine", lambda h, g: h * g)):
+        db.register(name, software=fn, accelerated=fn)
+    lib = Library(db)
+
+    def app(x):
+        g = lib.gate(x)
+        return lib.combine(lib.dispatch(g), g)
+
+    x = jax.random.normal(KEY, (8, 8))
+    off = courier_offload(app, x, db=db, prefer_hw=True, fuse=True,
+                          fused_cost_ms=lambda run: 0.0)
+    fused = [n for n in off.pipeline.ir.nodes if n.fused_from]
+    assert len(fused) == 1 and len(fused[0].fused_from) == 3
+    np.testing.assert_allclose(np.asarray(off.pipeline(x)),
+                               np.asarray(app(x)), atol=1e-6)
+
+
+def test_escaping_consumer_keeps_run_unfused():
+    """gate's output is also consumed OUTSIDE the hw run (a sw-only tail):
+    fusing would hide a value another node still needs."""
+    from repro.core import courier_offload
+
+    db = ModuleDatabase("t")
+    for name, fn in (("gate", lambda x: x * 2.0),
+                     ("dispatch", lambda g: g + 1.0)):
+        db.register(name, software=fn, accelerated=fn)
+    db.register("swtail", software=lambda g, h: g - h)   # no hw impl
+    lib = Library(db)
+
+    def app(x):
+        g = lib.gate(x)
+        return lib.swtail(g, lib.dispatch(g))
+
+    x = jax.random.normal(KEY, (8, 8))
+    off = courier_offload(app, x, db=db, prefer_hw=True, fuse=True,
+                          fused_cost_ms=lambda run: 0.0)
+    assert not [n for n in off.pipeline.ir.nodes if n.fused_from]
+    np.testing.assert_allclose(np.asarray(off.pipeline(x)),
+                               np.asarray(app(x)), atol=1e-6)
+
+
+def test_graph_output_intermediate_keeps_run_unfused():
+    ir = _annotated_ir((64, 64))
+    ir.graph_outputs = list(ir.nodes[0].outputs) + list(ir.graph_outputs)
+    kept = fuse_adjacent_hw(ir, _db_two_hw(), fused_cost_ms=lambda run: 0.0)
+    assert [n.fn_key for n in kept.nodes] == ["a", "b"]
+
+
+def test_stateful_node_never_fuses():
+    ir = _annotated_ir((64, 64))
+    ir.nodes[0].state = "kv"                         # host-side slot writes
+    kept = fuse_adjacent_hw(ir, _db_two_hw(), fused_cost_ms=lambda run: 0.0)
+    assert [n.fn_key for n in kept.nodes] == ["a", "b"]

@@ -1,0 +1,235 @@
+"""KV slot pool + incremental decode attention (ISSUE 10 state layer).
+
+Covers the three contracts the continuous-batching path leans on:
+
+1. :class:`KVSlotPool` lifecycle guards — every illegal transition
+   (exhaustion, double free, use-after-free, partial append, overflow)
+   raises :class:`SlotError` instead of corrupting another request's
+   cache, and the dead-row id ``-1`` is a uniform no-op.
+2. :class:`DecodeSession` — the slot is returned on every exit path,
+   including exceptions (the runtime counterpart of the
+   ``state-slot-leak`` lint rule).
+3. ``attention_decode`` parity — the O(prefix) incremental step is
+   bit-identical to re-running :func:`sw_attention` over the accumulated
+   prefix, and the database/tracer thread its ``state=`` marker onto the
+   traced node as ``serial_only``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Frontend, Library, ModuleDatabase
+from repro.models.zoo import register_decode_modules, sw_attention
+from repro.runtime.kvstate import DecodeSession, KVSlotPool, SlotError
+
+
+def _pool(n_slots: int = 2, max_seq: int = 4) -> KVSlotPool:
+    return KVSlotPool(n_slots, max_seq, {"k": (3,), "v": (3,)})
+
+
+# --------------------------------------------------------------------------- #
+# 1. Pool lifecycle guards
+# --------------------------------------------------------------------------- #
+def test_alloc_unique_and_exhaustion():
+    p = _pool(n_slots=3)
+    slots = [p.alloc() for _ in range(3)]
+    assert len(set(slots)) == 3
+    assert p.live_count() == 3
+    with pytest.raises(SlotError, match="exhausted"):
+        p.alloc()
+    # freeing one slot makes exactly one admission possible again
+    p.free(slots[1])
+    s = p.alloc()
+    assert s == slots[1]
+    assert p.stats()["high_water"] == 3
+
+
+def test_double_free_raises_and_dead_row_free_is_noop():
+    p = _pool()
+    s = p.alloc()
+    p.free(s)
+    with pytest.raises(SlotError, match="non-live"):
+        p.free(s)
+    p.free(-1)  # dead row: no-op, not an error
+    assert p.frees == 1
+
+
+def test_append_read_length_roundtrip():
+    p = _pool()
+    s = p.alloc()
+    rows = [np.arange(3, dtype=np.float32) + 10 * t for t in range(3)]
+    for t, r in enumerate(rows):
+        assert p.length(s) == t
+        assert p.append(s, k=r, v=-r) == t
+    got = p.read(s)
+    np.testing.assert_array_equal(got["k"], np.stack(rows))
+    np.testing.assert_array_equal(got["v"], -np.stack(rows))
+    # read returns copies: mutating the result must not reach the arena
+    got["k"][:] = 99.0
+    np.testing.assert_array_equal(p.read(s)["k"], np.stack(rows))
+    p.free(s)
+
+
+def test_append_must_write_every_buffer():
+    p = _pool()
+    s = p.alloc()
+    with pytest.raises(SlotError, match="every buffer"):
+        p.append(s, k=np.zeros(3, np.float32))          # missing "v"
+    with pytest.raises(SlotError, match="every buffer"):
+        p.append(s, k=np.zeros(3, np.float32),
+                 v=np.zeros(3, np.float32), extra=np.zeros(3))
+    assert p.length(s) == 0                              # nothing advanced
+    p.free(s)
+
+
+def test_slot_full_raises():
+    p = _pool(max_seq=2)
+    s = p.alloc()
+    row = np.zeros(3, np.float32)
+    p.append(s, k=row, v=row)
+    p.append(s, k=row, v=row)
+    with pytest.raises(SlotError, match="full"):
+        p.append(s, k=row, v=row)
+    p.free(s)
+
+
+def test_use_after_free_raises_everywhere():
+    p = _pool()
+    s = p.alloc()
+    p.free(s)
+    row = np.zeros(3, np.float32)
+    with pytest.raises(SlotError):
+        p.append(s, k=row, v=row)
+    with pytest.raises(SlotError):
+        p.read(s)
+    with pytest.raises(SlotError):
+        p.length(s)
+
+
+def test_dead_row_is_uniform_noop():
+    p = _pool()
+    row = np.ones(3, np.float32)
+    assert p.append(-1, k=row, v=row) == -1
+    assert p.length(-1) == 0
+    empty = p.read(-1)
+    assert empty["k"].shape == (0, 3) and empty["v"].shape == (0, 3)
+    assert p.allocs == 0 and p.live_count() == 0
+
+
+def test_realloc_resets_length_no_stale_rows():
+    p = _pool(n_slots=1)
+    s = p.alloc()
+    p.append(s, k=np.ones(3, np.float32), v=np.ones(3, np.float32))
+    p.free(s)
+    s2 = p.alloc()
+    assert s2 == s and p.length(s2) == 0
+    assert p.read(s2)["k"].shape == (0, 3)
+    p.free(s2)
+
+
+def test_check_no_leaks_audit():
+    p = _pool()
+    s = p.alloc()
+    with pytest.raises(SlotError, match="leak audit"):
+        p.check_no_leaks()
+    p.check_no_leaks(expected_live=[s])
+    p.free(s)
+    p.check_no_leaks()
+
+
+# --------------------------------------------------------------------------- #
+# 2. DecodeSession — slot returned on every exit path
+# --------------------------------------------------------------------------- #
+def test_decode_session_frees_on_normal_exit():
+    p = _pool()
+    with DecodeSession(p) as ses:
+        assert ses.slot is not None and p.live_count() == 1
+        p.append(ses.slot, k=np.zeros(3, np.float32),
+                 v=np.zeros(3, np.float32))
+    assert ses.slot is None
+    p.check_no_leaks()
+
+
+def test_decode_session_frees_on_exception():
+    p = _pool()
+    with pytest.raises(RuntimeError, match="driver died"):
+        with DecodeSession(p):
+            raise RuntimeError("driver died mid-request")
+    p.check_no_leaks()
+    assert p.allocs == 1 and p.frees == 1
+
+
+# --------------------------------------------------------------------------- #
+# 3. Incremental decode attention — parity + stateful registration
+# --------------------------------------------------------------------------- #
+D, HEADS, HD, T = 8, 2, 4, 5
+
+
+def _decode_db() -> tuple[ModuleDatabase, KVSlotPool]:
+    pool = KVSlotPool(2, T + 1, {"k": (HEADS, HD), "v": (HEADS, HD)})
+    db = ModuleDatabase()
+    register_decode_modules(db, pool, n_heads=HEADS)
+    return db, pool
+
+
+def _weights(seed: int = 0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return tuple(jax.random.normal(k, (D, D), jnp.float32) * 0.3 for k in ks)
+
+
+def test_decode_attention_matches_full_prefix_rerun():
+    db, pool = _decode_db()
+    attn = db.lookup("attention_decode").software
+    wq, wk, wv, wo = _weights()
+    x = jax.random.normal(jax.random.PRNGKey(9), (T, D), jnp.float32)
+    with DecodeSession(pool) as ses:
+        for t in range(T):
+            inc = attn(x[t:t + 1], ses.slot, wq, wk, wv, wo)
+            ref = sw_attention(x[:t + 1], wq, wk, wv, wo, n_heads=HEADS)
+            # bit-identical: _rope_at reuses _rope's fp32 angle math and
+            # the structural causal mask matches the -1e30 masked softmax
+            np.testing.assert_array_equal(np.asarray(inc[0]),
+                                          np.asarray(ref[-1]))
+            assert pool.length(ses.slot) == t + 1
+    pool.check_no_leaks()
+
+
+def test_decode_attention_dead_row_touches_nothing():
+    db, pool = _decode_db()
+    attn = db.lookup("attention_decode").software
+    wq, wk, wv, wo = _weights(1)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, D), jnp.float32)
+    y = attn(x, -1, wq, wk, wv, wo)
+    # a dead row attends over only itself == single-token full attention
+    ref = sw_attention(x, wq, wk, wv, wo, n_heads=HEADS)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+    assert pool.allocs == 0 and pool.live_count() == 0
+
+
+def test_stateful_registration_and_accelerated_rejection():
+    db, _ = _decode_db()
+    entry = db.lookup("attention_decode")
+    assert entry.state == "kv" and entry.accelerated is None
+    with pytest.raises(ValueError, match="stateful"):
+        db.register("bad_stateful", software=lambda x: x,
+                    accelerated=lambda x: x, state="kv")
+
+
+def test_trace_threads_state_onto_serial_only_node():
+    db, pool = _decode_db()
+    lib = Library(db)
+    wq, wk, wv, wo = _weights(3)
+
+    def app(x, slot):
+        return lib.attention_decode(x, slot, wq, wk, wv, wo)
+
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, D), jnp.float32)
+    # trace with the dead row so trace-time execution mutates no state
+    ir, _out = Frontend(db).trace(app, x, np.asarray(-1, dtype=np.int64))
+    nodes = [n for n in ir.nodes if n.fn_key == "attention_decode"]
+    assert len(nodes) == 1
+    assert nodes[0].state == "kv" and nodes[0].serial_only
+    assert pool.allocs == 0 and pool.live_count() == 0

@@ -25,7 +25,7 @@ from repro.launch.serve import (BATCH, BEST_EFFORT, INTERACTIVE,
                                 DeadlineExceeded, Overloaded, Request,
                                 RequestQueueServer, WaitTimeout,
                                 _ClassedQueue, _percentile, priority_of)
-from repro.runtime import ElasticPlanner
+from repro.runtime import ElasticPlanner, ReplanDecision
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -490,3 +490,65 @@ def test_random_transients_from_call_exempts_warmup():
         for _ in range(40):           # post-warmup: rate 0.9 fires fast
             inj.on_stage_call(0)
     assert inj.injected >= 1
+
+
+# --------------------------------------------------------------------------- #
+# sustained-overload autoscale: ladder level-2 streak -> widening replan
+# (ISSUE 10 satellite: capacity response instead of shedding forever)
+# --------------------------------------------------------------------------- #
+def _level2_window(adm):
+    """One observation window whose worst admission-time level reached 2
+    (backlog 11 x 10 ms > degrade_at x slo_ref_ms)."""
+    adm.admit(priority=BEST_EFFORT, deadline_ms=None,
+              depth_ahead=0, depth_total=11)
+    adm.end_window()
+
+
+def test_level2_streak_counts_consecutive_windows_only():
+    adm = AdmissionController(period_ms=10.0, slo_ref_ms=100.0,
+                              shed_at=0.5, degrade_at=1.0)
+    _level2_window(adm)
+    _level2_window(adm)
+    assert adm.level2_streak == 2
+    # a milder window (level 0) breaks the streak
+    adm.admit(priority=BATCH, deadline_ms=None, depth_ahead=0, depth_total=1)
+    adm.end_window()
+    assert adm.level2_streak == 0
+    _level2_window(adm)
+    assert adm.level2_streak == 1
+    assert adm.snapshot()["level2_streak"] == 1
+    adm.reset_streak()
+    assert adm.level2_streak == 0
+
+
+def test_autoscale_from_ladder_widens_after_sustained_streak():
+    planner = _chain_planner((1.0, 4.0))          # f1 is the 4 ms bottleneck
+    planner.executor_for(2, jit=False)[0].close()
+    prof = StageProfiler(2, min_samples=4)
+    for _ in range(6):
+        prof.record(0, 1.0)
+        prof.record(1, 4.0)
+    adm = AdmissionController(period_ms=10.0, slo_ref_ms=100.0,
+                              shed_at=0.5, degrade_at=1.0)
+
+    # below the trigger: no replan attempt, the streak keeps accumulating
+    for want in (1, 2):
+        _level2_window(adm)
+        d = planner.autoscale_from_ladder(adm, prof, worker_budget=4,
+                                          streak=3, jit=False)
+        assert d is None and adm.level2_streak == want
+    assert planner.replan_checks == 0             # never reached the planner
+
+    # third consecutive level-2 window trips the widen
+    _level2_window(adm)
+    d = planner.autoscale_from_ladder(adm, prof, worker_budget=4,
+                                      streak=3, jit=False)
+    assert isinstance(d, ReplanDecision) and d.replanned
+    assert d.plan.replicas is not None and max(d.plan.replicas) > 1
+    assert d.new_bottleneck_ms < d.old_bottleneck_ms
+    assert adm.level2_streak == 0                 # one burst, one attempt
+    if d.executor is not None:
+        d.executor.close()
+
+    with pytest.raises(ValueError, match="streak"):
+        planner.autoscale_from_ladder(adm, prof, worker_budget=4, streak=0)
